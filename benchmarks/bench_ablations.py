@@ -1,0 +1,92 @@
+"""Paper Tables 6/7/8 + Fig. 1: hyperparameter ablations for DP-FedAvg on a
+public corpus (the paper's privacy-free tuning methodology §III-A) —
+server optimizer, client batch size/lr, clipping norm, and the
+fraction-of-clients-clipped trajectory."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.configs import ClientConfig, DPConfig, get_config
+from repro.data.corpus import BigramCorpus
+from repro.data.federated import FederatedDataset, held_out_batch
+from repro.fl.round import FederatedTrainer
+from repro.models import build
+from repro.models.layers import lm_loss
+
+VOCAB = 1000
+ROUNDS = 20
+
+
+def _setup():
+    cfg = get_config("gboard-cifg-lstm").with_(vocab=VOCAB, d_model=48,
+                                               d_ff=96)
+    model = build(cfg)
+    corpus = BigramCorpus(vocab_size=VOCAB, seed=0)
+    ds = FederatedDataset(corpus, n_users=200, seq_len=16,
+                          sentences_per_user=30)
+    return cfg, model, corpus, ds
+
+
+def _recall_top1(cfg, model, params, corpus):
+    hb = held_out_batch(corpus, 256, 16)
+    import jax
+    logits = np.asarray(model.forward(params,
+                                      {"tokens": jnp.asarray(hb["tokens"])}),
+                        np.float32)
+    pred = logits[:, :, :VOCAB].argmax(-1)
+    mask = hb["mask"] > 0
+    return float((pred[mask] == hb["labels"][mask]).mean())
+
+
+def _train(cfg, model, corpus, ds, dp, cl, rounds=ROUNDS):
+    tr = FederatedTrainer(model, ds, dp, cl, n_local_batches=2, seed=0)
+    hist = tr.train(rounds)
+    return tr, _recall_top1(cfg, model, tr.state.params, corpus), hist
+
+
+def run():
+    cfg, model, corpus, ds = _setup()
+    base = dict(clients_per_round=30, noise_multiplier=0.3, clip_norm=0.8)
+    results = {}
+
+    # Table 6: server optimizer
+    for opt, lr, mu in [("sgd", 0.5, 0.0), ("momentum", 0.5, 0.9),
+                        ("adam", 0.002, 0.0)]:
+        dp = DPConfig(server_opt=opt, server_lr=lr, server_momentum=mu, **base)
+        cl = ClientConfig(local_epochs=1, batch_size=10, lr=0.3)
+        (_, recall, _), us = timed(lambda: _train(cfg, model, corpus, ds, dp, cl))
+        results[f"opt={opt}"] = recall
+        emit(f"table6/server_opt={opt}", us / ROUNDS,
+             f"top1_recall={recall:.4f}")
+
+    # Table 7: client batch size (paper: recall insensitive to |b|)
+    for b, lr in [(5, 0.2), (10, 0.3), (20, 0.3)]:
+        dp = DPConfig(server_opt="momentum", server_lr=0.5,
+                      server_momentum=0.9, **base)
+        cl = ClientConfig(local_epochs=1, batch_size=b, lr=lr)
+        (_, recall, _), us = timed(lambda: _train(cfg, model, corpus, ds, dp, cl))
+        results[f"b={b}"] = recall
+        emit(f"table7/client_batch={b}", us / ROUNDS,
+             f"top1_recall={recall:.4f}")
+
+    # Table 8 + Fig 1: clipping norm sweep → recall + frac-clipped trajectory
+    for S in (0.1, 0.8, 2.0):
+        dp = DPConfig(server_opt="momentum", server_lr=0.5,
+                      server_momentum=0.9, clients_per_round=30,
+                      noise_multiplier=0.3, clip_norm=S)
+        cl = ClientConfig(local_epochs=1, batch_size=10, lr=0.3)
+        ((tr, recall, hist)), us = timed(
+            lambda: _train(cfg, model, corpus, ds, dp, cl))
+        frac_first = np.mean([h["frac_clipped"] for h in hist[:5]])
+        frac_last = np.mean([h["frac_clipped"] for h in hist[-5:]])
+        results[f"S={S}"] = recall
+        emit(f"table8/clip_norm={S}", us / ROUNDS,
+             f"top1_recall={recall:.4f};fig1_frac_clipped_first5={frac_first:.2f};"
+             f"last5={frac_last:.2f}")
+    return results
+
+
+if __name__ == "__main__":
+    run()

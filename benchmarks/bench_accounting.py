@@ -1,0 +1,27 @@
+"""Paper Table 5: hypothetical (ε, δ)-DP upper bounds for the production run
+(T=2000, qN=20000, z=0.8, δ=N^-1.1) across population sizes, under both the
+paper's fixed-size-w/o-replacement accountant (WBK19) and the Poisson
+accountant (MTZ19)."""
+from __future__ import annotations
+
+from benchmarks.common import emit, timed
+from repro.core.accountant import table5_epsilon
+
+PAPER_TABLE5 = {2_000_000: 9.86, 3_000_000: 6.73, 4_000_000: 5.36,
+                5_000_000: 4.54, 10_000_000: 3.27}
+
+
+def run():
+    rows = []
+    for N, eps_paper in sorted(PAPER_TABLE5.items()):
+        (eps_wor, us) = timed(table5_epsilon, N, sampling="wor")
+        eps_poisson, _ = timed(table5_epsilon, N, sampling="poisson")
+        rows.append((N, eps_poisson, eps_wor, eps_paper))
+        emit(f"table5/N={N//10**6}M", us,
+             f"eps_wor={eps_wor:.2f};eps_poisson={eps_poisson:.2f};"
+             f"paper={eps_paper:.2f};rel_err_wor={abs(eps_wor-eps_paper)/eps_paper:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,49 @@
+"""Paper Table 3: expected number of times each (n_u, n_e) canary is seen in
+training. Analytic (the paper's 1150-participations-per-device estimate) and
+measured from the Pace-Steering population simulation."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.fl.population import PopulationSim
+from repro.fl.sampling import sample_round
+
+GRID = [(1, 1), (1, 14), (1, 200), (4, 1), (4, 14), (4, 200),
+        (16, 1), (16, 14), (16, 200)]
+PAPER = {(1, 1): 1_150, (1, 14): 16_100, (1, 200): 230_000,
+         (4, 1): 4_600, (4, 14): 64_400, (4, 200): 920_000,
+         (16, 1): 18_400, (16, 14): 257_600, (16, 200): 3_680_000}
+
+
+def simulate_participation(n_users=4_000, n_synth=189, rounds=400,
+                           clients_per_round=200, availability=0.02):
+    """Scaled-down fleet: measure synthetic-device participations/round."""
+    synth_ids = list(range(n_users - n_synth, n_users))
+    pop = PopulationSim(n_users, availability=availability,
+                        pace_cooldown=50, synthetic_ids=synth_ids, seed=0)
+    rng = np.random.default_rng(0)
+    part = np.zeros(n_users)
+    for r in range(rounds):
+        ids = sample_round(pop, rng, r, clients_per_round)
+        part[ids] += 1
+    return part[synth_ids].mean() / rounds, part[:n_users - n_synth].mean() / rounds
+
+
+def run():
+    (synth_rate, real_rate), us = timed(simulate_participation)
+    # paper: each synthetic device participates ≈1150 times in T=2000 rounds
+    per_device = synth_rate * 2000
+    emit("table3/participation_sim", us,
+         f"synth_per_2000_rounds={per_device:.0f};paper=1150;"
+         f"synth_vs_real_ratio={synth_rate/max(real_rate,1e-9):.1f}")
+    for (n_u, n_e) in GRID:
+        expected = n_u * n_e * per_device
+        emit(f"table3/nu={n_u}_ne={n_e}", 0.0,
+             f"expected_seen={expected:.0f};paper={PAPER[(n_u, n_e)]};"
+             f"scaled_ratio={expected / (n_u * n_e * 1150):.2f}")
+    return per_device
+
+
+if __name__ == "__main__":
+    run()

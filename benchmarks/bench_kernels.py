@@ -1,0 +1,56 @@
+"""Kernel micro-benchmarks: Pallas (interpret=True on CPU — correctness
+surrogate; TPU is the compile target) vs the pure-jnp reference path, plus
+the XLA fallback used by the models."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timed
+from repro.kernels.dp_clip.ops import clip_accumulate
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.ssd_scan.ops import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def run():
+    # dp_clip on a ~1.3M-param tree (the paper's model size)
+    tree = {"a": jax.random.normal(KEY, (10_000, 96)),
+            "b": jax.random.normal(jax.random.fold_in(KEY, 1), (96, 3000))}
+    acc = jax.tree_util.tree_map(jnp.zeros_like, tree)
+    out, us = timed(lambda: jax.block_until_ready(
+        clip_accumulate(acc, tree, 0.8)), repeats=3)
+    emit("kernel/dp_clip_1.3M", us, "interpret=True;vs_ref=validated_in_tests")
+
+    # flash attention 1×1024×8×64
+    q = jax.random.normal(KEY, (1, 1024, 8, 64), jnp.bfloat16)
+    k = jax.random.normal(jax.random.fold_in(KEY, 2), (1, 1024, 8, 64),
+                          jnp.bfloat16)
+    _, us_pallas = timed(lambda: jax.block_until_ready(
+        flash_attention(q, k, k)), repeats=2)
+    ref = jax.jit(lambda q, k, v: attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3)))
+    _, us_ref = timed(lambda: jax.block_until_ready(ref(q, k, k)), repeats=2)
+    emit("kernel/flash_attention_1k", us_pallas,
+         f"xla_ref_us={us_ref:.0f};note=interpret_mode_cpu")
+
+    # ssd scan 1×1024×8 heads
+    x = jax.random.normal(KEY, (1, 1024, 8, 64))
+    dt = jax.nn.softplus(jax.random.normal(KEY, (1, 1024, 8))) * 0.1
+    Bm = jax.random.normal(KEY, (1, 1024, 64))
+    A = -jnp.exp(jax.random.normal(KEY, (8,)))
+    _, us_k = timed(lambda: jax.block_until_ready(
+        ssd_scan(x, dt, Bm, Bm, A)), repeats=2)
+    refj = jax.jit(ssd_scan_ref)
+    _, us_r = timed(lambda: jax.block_until_ready(
+        refj(x, dt, Bm, Bm, A)), repeats=2)
+    emit("kernel/ssd_scan_1k", us_k,
+         f"sequential_ref_us={us_r:.0f};note=interpret_mode_cpu")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,18 @@
+"""Shared benchmark plumbing: timing + CSV emission."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+
+def timed(fn: Callable, *args, repeats: int = 1, **kw):
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeats
+    return out, dt * 1e6  # µs
+
+
+def emit(name: str, us_per_call: float, derived):
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)

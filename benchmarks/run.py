@@ -1,0 +1,59 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines. Tables covered:
+  Table 2 → bench_recall          (NWP vs Katz n-gram baseline)
+  Table 3 → bench_canary_exposure (participation / canary encounters)
+  Table 4 → bench_secret_sharer   (memorization grid, reduced scale)
+  Table 5 → bench_accounting      (hypothetical (ε,δ) bounds)
+  Tables 6/7/8 + Fig 1 → bench_ablations
+  (ours)  → bench_kernels, roofline (§Roofline terms per arch × shape)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: accounting,recall,"
+                         "ablations,canary,secret_sharer,kernels,roofline")
+    ap.add_argument("--skip-slow", action="store_true",
+                    help="skip the two multi-minute training benches")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_accounting, bench_ablations,
+                            bench_canary_exposure, bench_kernels,
+                            bench_recall, bench_secret_sharer, roofline)
+
+    benches = {
+        "accounting": bench_accounting.run,
+        "canary": bench_canary_exposure.run,
+        "kernels": bench_kernels.run,
+        "roofline": roofline.run,
+        "recall": bench_recall.run,
+        "ablations": bench_ablations.run,
+        "secret_sharer": bench_secret_sharer.run,
+    }
+    slow = {"recall", "ablations", "secret_sharer"}
+    selected = (args.only.split(",") if args.only else list(benches))
+
+    print("name,us_per_call,derived")
+    failures = []
+    for name in selected:
+        if args.skip_slow and name in slow:
+            continue
+        try:
+            benches[name]()
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        print(f"FAILED benches: {failures}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""The paper's technique is architecture-agnostic: run one DP-FedAvg round
+on a reduced variant of EVERY assigned architecture — dense, MoE, SSM,
+hybrid, VLM, audio — through the same Algorithm-1 machinery.
+
+    PYTHONPATH=src python examples/multi_arch_training.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ASSIGNED_ARCHS, ClientConfig, DPConfig, get_config
+from repro.core.dp_fedavg import finalize_round, server_step
+from repro.core.server_optim import init_state
+from repro.fl.client import user_update
+from repro.models import build
+
+dp = DPConfig(clients_per_round=4, noise_multiplier=0.3, clip_norm=0.5)
+client = ClientConfig(local_epochs=1, batch_size=2, lr=0.1)
+key = jax.random.PRNGKey(0)
+
+print(f"{'arch':24s} {'family':8s} {'loss':>8s} {'|delta|':>9s} "
+      f"{'clipped':>8s} {'|noise_std|':>11s}")
+for arch in ASSIGNED_ARCHS:
+    cfg = get_config(arch).reduced()
+    model = build(cfg)
+    params = model.init(key)
+    opt_state = init_state(params)
+    B, S = 2, 16
+
+    def batches(uk):
+        kt = jax.random.fold_in(key, uk)
+        toks = jax.random.randint(kt, (1, B, S + 1), 0, cfg.vocab)
+        b = {"tokens": toks[:, :, :-1], "labels": toks[:, :, 1:]}
+        if cfg.family == "encdec":
+            b["frames"] = jnp.zeros((1, B, cfg.n_audio_frames, cfg.d_model))
+        if cfg.family == "vlm":
+            b["image_embeds"] = jnp.zeros((1, B, cfg.n_image_tokens,
+                                           cfg.d_model))
+        return b
+
+    # 4 clients run UserUpdate; the server aggregates per Algorithm 1
+    total, norms, clipped, losses = None, [], [], []
+    for u in range(4):
+        delta, norm, was_clipped, loss = user_update(model, params,
+                                                     batches(u), client, dp)
+        total = delta if total is None else jax.tree_util.tree_map(
+            jnp.add, total, delta)
+        norms.append(float(norm)); clipped.append(float(was_clipped))
+        losses.append(float(loss))
+    noised, stats = finalize_round(total, 4, jax.random.fold_in(key, 99), dp)
+    params, opt_state = server_step(params, opt_state, noised, dp)
+    dn = float(jnp.sqrt(sum(jnp.sum(jnp.square(l))
+                            for l in jax.tree_util.tree_leaves(noised))))
+    print(f"{arch:24s} {cfg.family:8s} {np.mean(losses):8.3f} {dn:9.4f} "
+          f"{np.mean(clipped):8.2f} {float(stats.noise_std):11.2e}")
+print("\nevery family above went through clip -> average -> noise -> "
+      "momentum unchanged (DESIGN.md §Arch-applicability).")

@@ -1,0 +1,55 @@
+"""Quickstart: train the paper's production NWP model (CIFG-LSTM) with
+DP-FedAvg (Algorithm 1) on a simulated device fleet, track the privacy
+accountant, and decode a few next-word predictions.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ClientConfig, DPConfig, get_config
+from repro.data.corpus import BigramCorpus
+from repro.data.federated import FederatedDataset, held_out_batch
+from repro.data.tokenizer import BOS
+from repro.fl.round import FederatedTrainer
+from repro.launch.serve import generate
+from repro.models import build
+from repro.models.layers import lm_loss
+
+VOCAB = 2000
+
+# 1. the paper's model (scaled for CPU): 1-layer CIFG-LSTM, tied embeddings
+cfg = get_config("gboard-cifg-lstm").with_(vocab=VOCAB, d_model=64, d_ff=128)
+model = build(cfg)
+
+# 2. a federated population holding a synthetic Spanish-like corpus
+corpus = BigramCorpus(vocab_size=VOCAB, seed=0)
+dataset = FederatedDataset(corpus, n_users=300, seq_len=16,
+                           sentences_per_user=30)
+
+# 3. DP-FedAvg, Algorithm 1: clip S=0.8, fixed-size rounds, server momentum
+dp = DPConfig(clients_per_round=40, noise_multiplier=0.3, clip_norm=0.8,
+              server_opt="momentum", server_lr=0.5, server_momentum=0.9)
+client = ClientConfig(local_epochs=1, batch_size=10, lr=0.3)
+
+trainer = FederatedTrainer(model, dataset, dp, client, n_local_batches=3)
+print("training 60 DP-FedAvg rounds ...")
+trainer.train(60, log_every=15)
+
+# 4. held-out quality + the moments accountant
+hb = held_out_batch(corpus, 256, 16)
+logits = model.forward(trainer.state.params,
+                       {"tokens": jnp.asarray(hb["tokens"])})
+loss = lm_loss(logits, jnp.asarray(hb["labels"]), cfg.vocab,
+               jnp.asarray(hb["mask"]))
+print(f"\nheld-out loss: {float(loss):.3f}  "
+      f"(uniform would be {jnp.log(VOCAB):.3f})")
+print(f"accountant: eps={trainer.accountant.get_epsilon(1e-6):.2f} "
+      f"at delta=1e-6 after {trainer.accountant.rounds} rounds")
+
+# 5. serve: batched next-word prediction with the recurrent cache
+prompts = jnp.asarray([[BOS, 10, 11], [BOS, 20, 21]], jnp.int32)
+out = generate(model, trainer.state.params, prompts, steps=5)
+print("\ngreedy continuations:")
+for row in out:
+    print("  ", row.tolist())

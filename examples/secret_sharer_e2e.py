@@ -1,0 +1,48 @@
+"""End-to-end Federated Secret Sharer measurement (paper §IV, Table 4),
+reduced scale: inject canary-carrying synthetic devices into the training
+population, train with DP-FedAvg, then measure unintended memorization via
+Random-Sampling rank and Beam Search.
+
+    PYTHONPATH=src python examples/secret_sharer_e2e.py
+"""
+import jax
+
+from repro.configs import ClientConfig, DPConfig, get_config
+from repro.core.secret_sharer import (canary_extracted, make_canaries,
+                                      random_sampling_rank)
+from repro.data.corpus import BigramCorpus
+from repro.data.federated import FederatedDataset
+from repro.fl.round import FederatedTrainer
+from repro.models import build
+
+VOCAB = 1000
+GRID = [(1, 1), (4, 20), (16, 20)]   # reduced (n_u, n_e) grid
+
+cfg = get_config("gboard-cifg-lstm").with_(vocab=VOCAB, d_model=64, d_ff=128)
+model = build(cfg)
+corpus = BigramCorpus(vocab_size=VOCAB, seed=0)
+dataset = FederatedDataset(corpus, n_users=250, seq_len=16,
+                           sentences_per_user=30)
+
+canaries = make_canaries(jax.random.PRNGKey(42), vocab=VOCAB, grid=GRID,
+                         per_config=1)
+synth = dataset.inject_canaries(canaries)
+print(f"population: {len(dataset.users)} devices "
+      f"({len(synth)} secret-sharing synthetic devices)")
+
+dp = DPConfig(clients_per_round=40, noise_multiplier=0.3, clip_norm=0.8,
+              server_opt="momentum", server_lr=0.5, server_momentum=0.9)
+client = ClientConfig(local_epochs=1, batch_size=10, lr=0.3)
+trainer = FederatedTrainer(model, dataset, dp, client, n_local_batches=3)
+print("training 80 rounds with canary devices in the population ...")
+trainer.train(80, log_every=20)
+
+print("\n(n_u, n_e) -> RS rank (of 10k) | beam-extracted?   [paper Table 4]")
+for c in canaries:
+    rank = random_sampling_rank(model, trainer.state.params, c,
+                                jax.random.PRNGKey(7), n_samples=10_000,
+                                batch_size=2048)
+    bs = canary_extracted(model, trainer.state.params, c)
+    print(f"  ({c.n_u:2d},{c.n_e:3d})  rank={rank:6d}   "
+          f"extracted={'YES' if bs else 'no '}")
+print("\nexpected: (1,1) far from memorized; (16,20) memorized (rank→0).")

@@ -1,0 +1,7 @@
+"""repro: production-grade JAX reproduction of "Training Production Language
+Models without Memorizing User Data" (Ramaswamy*, Thakkar* et al., 2020).
+
+Top-level surface: DP-FedAvg (Algorithm 1), the RDP accountant, the Federated
+Secret Sharer, a 10-architecture model zoo, and the multi-pod launch layer.
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,23 @@
+from repro.configs.base import (
+    ClientConfig,
+    DPConfig,
+    InputShape,
+    MeshConfig,
+    ModelConfig,
+    RunConfig,
+    INPUT_SHAPES,
+    SINGLE_POD,
+    MULTI_POD,
+    TRAIN_4K,
+    PREFILL_32K,
+    DECODE_32K,
+    LONG_500K,
+)
+from repro.configs.registry import ALL_ARCHS, ASSIGNED_ARCHS, all_configs, get_config
+
+__all__ = [
+    "ClientConfig", "DPConfig", "InputShape", "MeshConfig", "ModelConfig",
+    "RunConfig", "INPUT_SHAPES", "SINGLE_POD", "MULTI_POD", "TRAIN_4K",
+    "PREFILL_32K", "DECODE_32K", "LONG_500K", "ALL_ARCHS", "ASSIGNED_ARCHS",
+    "all_configs", "get_config",
+]

@@ -1,0 +1,24 @@
+"""whisper-small [audio] — enc-dec, conv frontend (stub) [arXiv:2212.04356].
+
+Transformer backbone only; the mel-spectrogram + conv feature extractor is a
+STUB — ``input_specs`` provides precomputed frame embeddings (B, 1500, d).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-small",
+    family="encdec",
+    n_layers=12,       # decoder layers
+    n_enc_layers=12,
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=12,
+    d_ff=3072,
+    vocab=51865,
+    n_audio_frames=1500,
+    tie_embeddings=True,
+    act="gelu",
+    norm="layernorm",
+    rope_theta=0.0,    # whisper uses learned/sinusoidal positions, not RoPE
+    citation="arXiv:2212.04356 (Whisper)",
+)

@@ -1,0 +1,19 @@
+"""The paper's primary contribution: DP-FedAvg with fixed-size federated
+rounds (Algorithm 1), its RDP accountant, and the Federated Secret Sharer
+memorization measurement."""
+from repro.core.accountant import MomentsAccountant, table5_epsilon
+from repro.core.clipping import clip_by_global_norm
+from repro.core.dp_fedavg import (RoundStats, aggregate, dp_fedavg_round,
+                                  finalize_round, server_step)
+from repro.core.secret_sharer import (Canary, beam_search, canary_extracted,
+                                      log_perplexity, make_canaries,
+                                      random_sampling_rank)
+from repro.core.server_optim import ServerOptState, apply_update, init_state
+
+__all__ = [
+    "MomentsAccountant", "table5_epsilon", "clip_by_global_norm",
+    "RoundStats", "aggregate", "dp_fedavg_round", "finalize_round",
+    "server_step", "Canary", "beam_search", "canary_extracted",
+    "log_perplexity", "make_canaries", "random_sampling_rank",
+    "ServerOptState", "apply_update", "init_state",
+]

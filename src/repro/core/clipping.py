@@ -1,0 +1,26 @@
+"""Per-user update clipping (Algorithm 1, UserUpdate's final line).
+
+``clip_by_global_norm`` is the reference pytree path; the Pallas-backed path
+(`repro.kernels.dp_clip`) fuses the square-accumulate / clip-scale /
+sum-accumulate over flat f32 vectors and is validated against this.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.pytree import tree_global_norm
+
+
+def clip_factor(norm, clip_norm: float):
+    """min(1, S/‖Δ‖) — the paper's clip (Algorithm 1)."""
+    return jnp.minimum(1.0, clip_norm / jnp.maximum(norm, 1e-12))
+
+
+def clip_by_global_norm(update, clip_norm: float):
+    """Returns (clipped_update, pre_clip_norm, was_clipped)."""
+    norm = tree_global_norm(update)
+    factor = clip_factor(norm, clip_norm)
+    clipped = jax.tree_util.tree_map(
+        lambda l: (l.astype(jnp.float32) * factor).astype(l.dtype), update)
+    return clipped, norm, (factor < 1.0).astype(jnp.float32)

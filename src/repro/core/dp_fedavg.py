@@ -1,0 +1,75 @@
+"""DP-FedAvg with fixed-size federated rounds — Algorithm 1 of the paper.
+
+Server side of the mechanism, architecture-agnostic over update pytrees:
+
+    Δ̄ = (1/qN) Σ_k clip_S(Δ_k)          (clip → weighted average)
+    θ' = θ + ServerOpt(Δ̄ + N(0, I·σ²))   with σ = zS/(qN)
+
+Two aggregation entry points are provided:
+  * :func:`aggregate` — takes the round's per-user updates stacked on a
+    leading axis (simulation path, small scale);
+  * :func:`finalize_round` — takes an already-accumulated clipped *sum*
+    (the production-shape path: `launch.steps.fed_train_step` accumulates
+    the clipped sum with `lax.scan` over client microbatches so per-user
+    updates never coexist in memory).
+
+Noise is always sampled in f32 (see `utils.pytree.tree_noise`).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DPConfig
+from repro.core.clipping import clip_by_global_norm
+from repro.core.server_optim import ServerOptState, apply_update
+from repro.utils.pytree import tree_noise
+
+
+class RoundStats(NamedTuple):
+    mean_update_norm: jax.Array   # mean pre-clip ‖Δ_k‖
+    frac_clipped: jax.Array       # fraction of users whose update was clipped
+    noise_std: jax.Array          # σ actually applied
+
+
+def clip_user_update(update, dp: DPConfig):
+    """Algorithm 1 UserUpdate final line: Δ·min(1, S/‖Δ‖)."""
+    return clip_by_global_norm(update, dp.clip_norm)
+
+
+def aggregate(user_updates, key, dp: DPConfig, n_clients: int = None):
+    """user_updates: pytree with leading user axis. → (noised mean Δ, stats)."""
+    n = n_clients or jax.tree_util.tree_leaves(user_updates)[0].shape[0]
+    clipped, norms, was_clipped = jax.vmap(
+        lambda u: clip_user_update(u, dp))(user_updates)
+    total = jax.tree_util.tree_map(
+        lambda l: jnp.sum(l.astype(jnp.float32), axis=0), clipped)
+    return finalize_round(total, n, key, dp, stats=(jnp.mean(norms),
+                                                    jnp.mean(was_clipped)))
+
+
+def finalize_round(clipped_sum, n_clients, key, dp: DPConfig, stats=None):
+    """clipped_sum: Σ_k clip_S(Δ_k) (f32 pytree). Divide by the round size,
+    add N(0, σ²) with σ = z·S/round_size, return (Δ̄, RoundStats)."""
+    n = jnp.asarray(n_clients, jnp.float32)
+    sigma = dp.noise_multiplier * dp.clip_norm / n
+    mean = jax.tree_util.tree_map(lambda l: l / n, clipped_sum)
+    noise = tree_noise(key, mean, sigma)
+    noised = jax.tree_util.tree_map(jnp.add, mean, noise)
+    mean_norm, frac = stats if stats is not None else (
+        jnp.zeros(()), jnp.zeros(()))
+    return noised, RoundStats(mean_norm, frac, sigma)
+
+
+def server_step(params, opt_state: ServerOptState, delta, dp: DPConfig):
+    """θ ← θ + ServerOpt(Δ̄)."""
+    return apply_update(params, delta, opt_state, dp)
+
+
+def dp_fedavg_round(params, opt_state, user_updates, key, dp: DPConfig):
+    """Full Algorithm-1 server round from stacked per-user updates."""
+    delta, stats = aggregate(user_updates, key, dp)
+    params, opt_state = server_step(params, opt_state, delta, dp)
+    return params, opt_state, stats

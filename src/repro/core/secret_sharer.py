@@ -1,0 +1,146 @@
+"""Federated Secret Sharer — the paper's §II-B / §IV measurement framework.
+
+Canaries are 5-word sequences with each word drawn u.a.r. from the model
+vocabulary, parameterized by (n_u = #secret-sharing users, n_e = #copies per
+user). Two extraction measures:
+
+* Random Sampling (RS) rank [CLK+18]: rank of the canary continuation's
+  log-perplexity P_θ(s|p) among |R| random continuations (paper: |R|=2e6).
+* Beam Search (BS): is the canary among the top-5 width-5 continuations of
+  its 2-word prefix.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.api import Model
+
+CANARY_LEN = 5
+PREFIX_LEN = 2
+
+
+@dataclass(frozen=True)
+class Canary:
+    tokens: Tuple[int, ...]   # full 5-word canary (token ids)
+    n_u: int                  # users sharing this canary
+    n_e: int                  # copies per user
+
+    @property
+    def prefix(self) -> Tuple[int, ...]:
+        return self.tokens[:PREFIX_LEN]
+
+    @property
+    def continuation(self) -> Tuple[int, ...]:
+        return self.tokens[PREFIX_LEN:]
+
+
+def make_canaries(key, vocab: int,
+                  grid: Sequence[Tuple[int, int]] = ((1, 1), (1, 14), (1, 200),
+                                                     (4, 1), (4, 14), (4, 200),
+                                                     (16, 1), (16, 14), (16, 200)),
+                  per_config: int = 3, length: int = CANARY_LEN) -> List[Canary]:
+    """The paper's 3 canaries × 9 (n_u, n_e) configurations (§IV-A)."""
+    canaries = []
+    for (n_u, n_e) in grid:
+        for i in range(per_config):
+            key, sub = jax.random.split(key)
+            toks = jax.random.randint(sub, (length,), 0, vocab)
+            canaries.append(Canary(tuple(int(t) for t in toks), n_u, n_e))
+    return canaries
+
+
+# ---------------------------------------------------------------------------
+# log-perplexity scoring
+# ---------------------------------------------------------------------------
+
+
+def _batched_log_perplexity(params, seqs, model: Model, prefix_len: int):
+    """seqs: (B, L) full sequences (prefix + continuation).
+    Returns (B,) Σ_i −log Pr(s_i | p, s_<i) over the continuation positions."""
+    logits = model.forward(params, {"tokens": seqs})         # (B, L, Vpad)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    # next-token prediction: logits at position i predict token i+1
+    targets = seqs[:, 1:]
+    lp = jnp.take_along_axis(logp[:, :-1, :], targets[..., None],
+                             axis=-1)[..., 0]                # (B, L-1)
+    cont = lp[:, prefix_len - 1:]
+    return -jnp.sum(cont, axis=-1)
+
+
+def log_perplexity(model: Model, params, sequences: np.ndarray,
+                   prefix_len: int = PREFIX_LEN, batch_size: int = 512) -> np.ndarray:
+    """Score many (prefix+continuation) sequences; returns np.float32 (N,)."""
+    fn = jax.jit(partial(_batched_log_perplexity, model=model,
+                         prefix_len=prefix_len))
+    out = []
+    n = sequences.shape[0]
+    for i in range(0, n, batch_size):
+        chunk = sequences[i:i + batch_size]
+        pad = batch_size - chunk.shape[0]
+        if pad:
+            chunk = np.concatenate([chunk, np.zeros((pad, chunk.shape[1]),
+                                                    chunk.dtype)])
+        scores = np.asarray(fn(params, jnp.asarray(chunk)))
+        out.append(scores[:batch_size - pad if pad else batch_size])
+    return np.concatenate(out)
+
+
+def random_sampling_rank(model: Model, params, canary: Canary, key,
+                         n_samples: int = 100_000,
+                         batch_size: int = 1024) -> int:
+    """rank_θ(c; R) = |{r ∈ R : P_θ(r|p) < P_θ(s|p)}|   (paper §IV-A.1)."""
+    vocab = model.cfg.vocab
+    cont_len = CANARY_LEN - PREFIX_LEN
+    canary_seq = np.asarray(canary.tokens, np.int32)[None, :]
+    canary_score = float(log_perplexity(model, params, canary_seq)[0])
+    rank = 0
+    for i in range(0, n_samples, batch_size):
+        b = min(batch_size, n_samples - i)
+        key, sub = jax.random.split(key)
+        conts = jax.random.randint(sub, (b, cont_len), 0, vocab)
+        seqs = np.concatenate(
+            [np.tile(np.asarray(canary.prefix, np.int32), (b, 1)),
+             np.asarray(conts, np.int32)], axis=1)
+        scores = log_perplexity(model, params, seqs, batch_size=batch_size)
+        rank += int(np.sum(scores < canary_score))
+    return rank
+
+
+# ---------------------------------------------------------------------------
+# beam search extraction
+# ---------------------------------------------------------------------------
+
+
+def beam_search(model: Model, params, prefix: Sequence[int], total_len: int,
+                width: int = 5) -> List[Tuple[int, ...]]:
+    """Greedy beam search continuation of ``prefix`` to ``total_len`` words.
+    Returns the top-``width`` sequences (paper §IV-A.2)."""
+    vocab = model.cfg.vocab
+    beams = [(tuple(prefix), 0.0)]
+    fwd = jax.jit(lambda p, t: model.forward(p, {"tokens": t}))
+    for _ in range(total_len - len(prefix)):
+        seqs = jnp.asarray([b[0] for b in beams], jnp.int32)
+        logits = fwd(params, seqs)[:, -1, :]
+        logp = np.asarray(jax.nn.log_softmax(
+            logits.astype(jnp.float32), axis=-1))[:, :vocab]
+        cand = []
+        for (toks, score), row in zip(beams, logp):
+            top = np.argpartition(-row, width)[:width]
+            for t in top:
+                cand.append((toks + (int(t),), score + float(row[t])))
+        cand.sort(key=lambda x: -x[1])
+        beams = cand[:width]
+    return [b[0] for b in beams]
+
+
+def canary_extracted(model: Model, params, canary: Canary,
+                     width: int = 5) -> bool:
+    """BS check: canary among top-5 5-word continuations of its 2-word prefix."""
+    tops = beam_search(model, params, canary.prefix, CANARY_LEN, width)
+    return tuple(canary.tokens) in [tuple(t) for t in tops]

@@ -1,0 +1,75 @@
+"""Server optimizers for DP-FedAvg (paper Table 1 / Table 6 ablation).
+
+The paper's production configuration is Nesterov momentum with η_s=1.0,
+μ=0.99; plain SGD and Adam are implemented for the Table 6 ablation. All
+state/updates are f32 pytrees; the "gradient" is the *negated* averaged model
+delta (server update direction = +Δ), so we feed Δ directly and ADD.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DPConfig
+from repro.utils.pytree import tree_zeros_like
+
+
+class ServerOptState(NamedTuple):
+    momentum: object   # pytree or None-like zeros
+    nu: object         # adam second moment
+    count: object      # scalar int32
+
+
+def init_state(params) -> ServerOptState:
+    f32 = lambda t: jax.tree_util.tree_map(
+        lambda l: jnp.zeros(l.shape, jnp.float32), t)
+    return ServerOptState(momentum=f32(params), nu=f32(params),
+                          count=jnp.zeros((), jnp.int32))
+
+
+def apply_update(params, delta, state: ServerOptState, dp: DPConfig):
+    """θ ← θ + ServerOpt(Δ). Returns (new_params, new_state)."""
+    lr = dp.server_lr
+    if dp.server_opt == "sgd":
+        new_params = jax.tree_util.tree_map(
+            lambda p, d: (p.astype(jnp.float32) + lr * d).astype(p.dtype),
+            params, delta)
+        return new_params, state._replace(count=state.count + 1)
+
+    if dp.server_opt == "momentum":
+        mu = dp.server_momentum
+        new_m = jax.tree_util.tree_map(
+            lambda m, d: mu * m + d.astype(jnp.float32), state.momentum, delta)
+        if dp.nesterov:
+            step = jax.tree_util.tree_map(
+                lambda m, d: mu * m + d.astype(jnp.float32), new_m, delta)
+        else:
+            step = new_m
+        new_params = jax.tree_util.tree_map(
+            lambda p, s: (p.astype(jnp.float32) + lr * s).astype(p.dtype),
+            params, step)
+        return new_params, state._replace(momentum=new_m,
+                                          count=state.count + 1)
+
+    if dp.server_opt == "adam":
+        b1, b2, eps = 0.9, 0.999, dp.adam_eps
+        cnt = state.count + 1
+        new_m = jax.tree_util.tree_map(
+            lambda m, d: b1 * m + (1 - b1) * d.astype(jnp.float32),
+            state.momentum, delta)
+        new_v = jax.tree_util.tree_map(
+            lambda v, d: b2 * v + (1 - b2) * jnp.square(d.astype(jnp.float32)),
+            state.nu, delta)
+        c = cnt.astype(jnp.float32)
+        bc1 = 1.0 - b1 ** c
+        bc2 = 1.0 - b2 ** c
+        new_params = jax.tree_util.tree_map(
+            lambda p, m, v: (p.astype(jnp.float32)
+                             + lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+                             ).astype(p.dtype),
+            params, new_m, new_v)
+        return new_params, ServerOptState(new_m, new_v, cnt)
+
+    raise ValueError(f"unknown server_opt {dp.server_opt!r}")

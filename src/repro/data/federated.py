@@ -1,0 +1,124 @@
+"""User-sharded federated dataset with canary injection.
+
+Mirrors the paper's setup (§IV-A): real devices hold sentences from the
+corpus; *secret-sharing synthetic devices* hold ``n_e`` copies of their
+canary plus ``(200 − n_e)`` public-corpus sentences. Per-user example caps
+(one of the paper's multifaceted privacy measures) are enforced here.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.secret_sharer import Canary
+from repro.data.corpus import BigramCorpus
+from repro.data.tokenizer import PAD
+
+USER_SENTENCES = 200  # paper: synthetic devices hold 200 examples total
+
+
+def sentences_to_examples(sentences: Sequence[Sequence[int]], seq_len: int,
+                          max_examples: Optional[int] = None) -> np.ndarray:
+    """Pack sentences into fixed (n, seq_len+1) windows (inputs+shifted labels
+    share the window; PAD-masked loss). One sentence per window."""
+    rows = []
+    for s in sentences:
+        s = list(s)[: seq_len + 1]
+        rows.append(s + [PAD] * (seq_len + 1 - len(s)))
+        if max_examples and len(rows) >= max_examples:
+            break
+    return np.asarray(rows, np.int32)
+
+
+def examples_to_batch(ex: np.ndarray) -> Dict[str, np.ndarray]:
+    tokens = ex[:, :-1]
+    labels = ex[:, 1:]
+    mask = (labels != PAD).astype(np.float32)
+    return {"tokens": tokens, "labels": labels, "mask": mask}
+
+
+@dataclass
+class UserShard:
+    user_id: int
+    examples: np.ndarray          # (n, seq_len+1) int32
+    is_synthetic: bool = False    # secret-sharing device?
+    canary: Optional[Canary] = None
+
+
+@dataclass
+class FederatedDataset:
+    corpus: BigramCorpus
+    n_users: int
+    seq_len: int = 16
+    sentences_per_user: int = 40
+    max_examples_per_user: int = 200  # the paper's per-user cap
+    seed: int = 0
+    users: List[UserShard] = field(default_factory=list)
+
+    def __post_init__(self):
+        for uid in range(self.n_users):
+            sents = self.corpus.sample_sentences(
+                min(self.sentences_per_user, self.max_examples_per_user),
+                seed=self.seed * 1_000_003 + uid)
+            self.users.append(UserShard(
+                uid, sentences_to_examples(sents, self.seq_len,
+                                           self.max_examples_per_user)))
+
+    def inject_canaries(self, canaries: Sequence[Canary]) -> List[UserShard]:
+        """Create the paper's secret-sharing synthetic devices: for each
+        canary, n_u devices each holding n_e canary copies + (200−n_e) public
+        sentences. Appends them to the population; returns them."""
+        synthetic = []
+        next_id = len(self.users)
+        for ci, c in enumerate(canaries):
+            for u in range(c.n_u):
+                n_e = min(c.n_e, USER_SENTENCES)
+                pub = self.corpus.sample_sentences(
+                    USER_SENTENCES - n_e,
+                    seed=777_000_000 + ci * 1_000 + u)
+                sents = [list(c.tokens)] * n_e + pub
+                shard = UserShard(next_id,
+                                  sentences_to_examples(sents, self.seq_len,
+                                                        USER_SENTENCES),
+                                  is_synthetic=True, canary=c)
+                self.users.append(shard)
+                synthetic.append(shard)
+                next_id += 1
+        return synthetic
+
+    def user_batches(self, user_id: int, batch_size: int,
+                     rng: np.random.Generator) -> List[Dict[str, np.ndarray]]:
+        """Split a user's (shuffled) examples into size-B batches (last batch
+        padded by repetition so shapes stay static for jit)."""
+        ex = self.users[user_id].examples
+        perm = rng.permutation(ex.shape[0])
+        ex = ex[perm]
+        n = ex.shape[0]
+        batches = []
+        for i in range(0, n, batch_size):
+            chunk = ex[i:i + batch_size]
+            if chunk.shape[0] < batch_size:
+                reps = np.resize(np.arange(chunk.shape[0]), batch_size)
+                chunk = chunk[reps]
+            batches.append(examples_to_batch(chunk))
+        return batches
+
+    def user_tensor(self, user_id: int, batch_size: int, n_batches: int,
+                    rng: np.random.Generator) -> Dict[str, np.ndarray]:
+        """Fixed-shape (n_batches, B, S) stack for the vmapped/jit round path;
+        examples are tiled if the user has fewer than n_batches·B."""
+        ex = self.users[user_id].examples
+        need = n_batches * batch_size
+        idx = rng.permutation(np.resize(np.arange(ex.shape[0]), need))
+        ex = ex[idx].reshape(n_batches, batch_size, -1)
+        out = {"tokens": ex[:, :, :-1], "labels": ex[:, :, 1:]}
+        out["mask"] = (out["labels"] != PAD).astype(np.float32)
+        return out
+
+
+def held_out_batch(corpus: BigramCorpus, n: int, seq_len: int,
+                   seed: int = 999) -> Dict[str, np.ndarray]:
+    ex = sentences_to_examples(corpus.sample_sentences(n, seed), seq_len)
+    return examples_to_batch(ex)

@@ -1,0 +1,66 @@
+"""UserUpdate(k, θ) — Algorithm 1's client procedure.
+
+E local epochs of minibatch SGD at learning rate η_c, then the model delta
+Δ = θ_local − θ0 clipped to L2 norm S. Pure-JAX, jit-compiled once per
+(model, batch-shape); the round layer vmaps it over sampled clients.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ClientConfig, DPConfig
+from repro.core.clipping import clip_by_global_norm
+from repro.models.api import Model
+from repro.utils.pytree import tree_sub
+
+
+def local_sgd(model: Model, params, batches: Dict[str, jnp.ndarray],
+              client: ClientConfig):
+    """batches: pytree of (n_batches, B, ...) arrays. Runs E epochs of SGD."""
+
+    def sgd_batch(p, batch):
+        loss, grads = jax.value_and_grad(model.loss_fn)(p, batch)
+        new_p = jax.tree_util.tree_map(
+            lambda w, g: (w.astype(jnp.float32)
+                          - client.lr * g.astype(jnp.float32)).astype(w.dtype),
+            p, grads)
+        return new_p, loss
+
+    def epoch(p, _):
+        p, losses = jax.lax.scan(sgd_batch, p, batches)
+        return p, jnp.mean(losses)
+
+    params, losses = jax.lax.scan(epoch, params, None,
+                                  length=client.local_epochs)
+    return params, jnp.mean(losses)
+
+
+def user_update(model: Model, params0, batches, client: ClientConfig,
+                dp: DPConfig):
+    """Returns (clipped Δ_k, pre-clip norm, was_clipped, mean loss)."""
+    params_local, loss = local_sgd(model, params0, batches, client)
+    delta = tree_sub(
+        jax.tree_util.tree_map(lambda l: l.astype(jnp.float32), params_local),
+        jax.tree_util.tree_map(lambda l: l.astype(jnp.float32), params0))
+    clipped, norm, was_clipped = clip_by_global_norm(delta, dp.clip_norm)
+    return clipped, norm, was_clipped, loss
+
+
+def make_round_fn(model: Model, client: ClientConfig, dp: DPConfig):
+    """jit-able: (params, stacked client batches (C, nb, B, S)) →
+    (sum of clipped updates, mean norm, frac clipped, mean loss)."""
+
+    @partial(jax.jit, static_argnums=())
+    def round_fn(params, stacked_batches):
+        def one(batches):
+            return user_update(model, params, batches, client, dp)
+
+        clipped, norms, flags, losses = jax.vmap(one)(stacked_batches)
+        total = jax.tree_util.tree_map(lambda l: jnp.sum(l, axis=0), clipped)
+        return total, jnp.mean(norms), jnp.mean(flags), jnp.mean(losses)
+
+    return round_fn

@@ -1,0 +1,95 @@
+"""Federated round orchestration: sample → local train → Algorithm 1 server.
+
+This is the *simulation* driver (CPU-scale, real data movement); the
+production-shape distributed round is `repro.launch.steps.fed_train_step`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ClientConfig, DPConfig
+from repro.core import accountant as acct
+from repro.core.dp_fedavg import finalize_round, server_step
+from repro.core.server_optim import ServerOptState, init_state
+from repro.data.federated import FederatedDataset
+from repro.fl.client import make_round_fn
+from repro.fl.population import PopulationSim
+from repro.fl.sampling import sample_round
+from repro.models.api import Model
+
+
+@dataclass
+class TrainerState:
+    params: object
+    opt_state: ServerOptState
+    round_idx: int = 0
+    history: List[Dict] = field(default_factory=list)
+
+
+class FederatedTrainer:
+    """End-to-end DP-FedAvg trainer over a simulated device population."""
+
+    def __init__(self, model: Model, dataset: FederatedDataset,
+                 dp: DPConfig, client: ClientConfig,
+                 pop: Optional[PopulationSim] = None, seed: int = 0,
+                 n_local_batches: int = 4):
+        self.model = model
+        self.dataset = dataset
+        self.dp = dp
+        self.client = client
+        self.n_local_batches = n_local_batches
+        synth = [u.user_id for u in dataset.users if u.is_synthetic]
+        self.pop = pop or PopulationSim(len(dataset.users),
+                                        synthetic_ids=synth, seed=seed)
+        self.rng = np.random.default_rng(seed)
+        self.key = jax.random.PRNGKey(seed)
+        self._round_fn = make_round_fn(model, client, dp)
+        self.accountant = acct.MomentsAccountant(
+            q=dp.clients_per_round / max(len(dataset.users), 1),
+            noise_multiplier=dp.noise_multiplier, sampling="wor")
+        params = model.init(jax.random.PRNGKey(seed + 1))
+        self.state = TrainerState(params, init_state(params))
+        self.participation = np.zeros(len(dataset.users), np.int64)
+
+    def _stack_clients(self, ids: np.ndarray):
+        tensors = [self.dataset.user_tensor(int(u), self.client.batch_size,
+                                            self.n_local_batches, self.rng)
+                   for u in ids]
+        return {k: jnp.asarray(np.stack([t[k] for t in tensors]))
+                for k in tensors[0]}
+
+    def run_round(self) -> Dict:
+        s = self.state
+        ids = sample_round(self.pop, self.rng, s.round_idx,
+                           self.dp.clients_per_round)
+        self.participation[ids] += 1
+        stacked = self._stack_clients(ids)
+        total, mean_norm, frac_clipped, loss = self._round_fn(s.params, stacked)
+        self.key, sub = jax.random.split(self.key)
+        delta, stats = finalize_round(total, len(ids), sub, self.dp,
+                                      stats=(mean_norm, frac_clipped))
+        s.params, s.opt_state = server_step(s.params, s.opt_state, delta,
+                                            self.dp)
+        self.accountant.step()
+        s.round_idx += 1
+        rec = {"round": s.round_idx, "loss": float(loss),
+               "mean_update_norm": float(mean_norm),
+               "frac_clipped": float(frac_clipped),
+               "n_clients": int(len(ids)),
+               "noise_std": float(stats.noise_std)}
+        s.history.append(rec)
+        return rec
+
+    def train(self, rounds: int, log_every: int = 0) -> List[Dict]:
+        for r in range(rounds):
+            rec = self.run_round()
+            if log_every and (r + 1) % log_every == 0:
+                print(f"round {rec['round']:4d}  loss {rec['loss']:.4f}  "
+                      f"clipped {rec['frac_clipped']:.2f}  "
+                      f"norm {rec['mean_update_norm']:.3f}")
+        return self.state.history

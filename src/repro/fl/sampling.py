@@ -1,0 +1,43 @@
+"""Client sampling for federated rounds.
+
+The paper's Algorithm 1 uses *fixed-size* rounds: exactly qN users sampled
+without replacement — in the production system, from the (much smaller,
+Pace-Steering-shaped) set of checked-in devices, which is precisely the gap
+between deployed mechanism and provable guarantee discussed in §V-A.
+Poisson sampling (the [MRTZ17] scheme) is provided for comparison.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.fl.population import PopulationSim
+
+
+def fixed_size_sample(rng: np.random.Generator, ids: np.ndarray, k: int,
+                      weights: Optional[np.ndarray] = None) -> np.ndarray:
+    """Sample exactly k without replacement (weighted when Pace Steering
+    shapes priorities)."""
+    k = min(k, ids.shape[0])
+    return rng.choice(ids, size=k, replace=False, p=weights)
+
+
+def poisson_sample(rng: np.random.Generator, ids: np.ndarray,
+                   q: float) -> np.ndarray:
+    return ids[rng.random(ids.shape[0]) < q]
+
+
+def sample_round(pop: PopulationSim, rng: np.random.Generator,
+                 round_idx: int, clients_per_round: int,
+                 scheme: str = "fixed") -> np.ndarray:
+    """Production round sampling: check-in → Pace-Steering weights → sample."""
+    checked = pop.checked_in(round_idx)
+    if scheme == "poisson":
+        chosen = poisson_sample(rng, checked,
+                                clients_per_round / pop.n_users)
+    else:
+        w = pop.selection_weights(checked, round_idx)
+        chosen = fixed_size_sample(rng, checked, clients_per_round, w)
+    pop.mark_participated(chosen, round_idx)
+    return chosen

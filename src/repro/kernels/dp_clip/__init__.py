@@ -1,0 +1,1 @@
+from repro.kernels.dp_clip.ops import clip_accumulate, fused_sumsq

@@ -1,0 +1,48 @@
+"""jit'd wrappers: pytree-level fused clip-and-accumulate.
+
+``fused_sumsq(tree)`` / ``clip_accumulate(acc_tree, delta_tree, factor)``
+flatten each leaf, pad to the (ROWS·LANES) tile, and run the Pallas kernels;
+`interpret=True` executes the kernel bodies on CPU for validation (TPU is
+the compile target).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dp_clip import dp_clip as K
+from repro.kernels.dp_clip.ref import clip_factor_ref
+
+
+def _to_tiles(leaf):
+    flat = leaf.reshape(-1).astype(jnp.float32)
+    pad = (-flat.shape[0]) % K.TILE
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, K.LANES)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def fused_sumsq(tree, *, interpret: bool = True):
+    """Global Σx² over a pytree via the tiled Pallas reduction."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return sum(K.sumsq(_to_tiles(l), interpret=interpret) for l in leaves)
+
+
+@partial(jax.jit, static_argnames=("clip_norm", "interpret"))
+def clip_accumulate(acc_tree, delta_tree, clip_norm: float,
+                    *, interpret: bool = True):
+    """acc ← acc + min(1, S/‖Δ‖)·Δ  (Algorithm 1's clip + round-sum), fused.
+    Returns (new_acc_tree, pre-clip norm)."""
+    ss = fused_sumsq(delta_tree, interpret=interpret)
+    factor = clip_factor_ref(ss, clip_norm)
+
+    def one(acc, delta):
+        a2, d2 = _to_tiles(acc), _to_tiles(delta)
+        out = K.clip_accumulate_2d(a2, d2, factor, interpret=interpret)
+        return out.reshape(-1)[: acc.size].reshape(acc.shape)
+
+    new_acc = jax.tree_util.tree_map(one, acc_tree, delta_tree)
+    return new_acc, jnp.sqrt(ss)

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the dp_clip kernels."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sumsq_ref(x):
+    return jnp.sum(jnp.square(x.astype(jnp.float32)))
+
+
+def clip_accumulate_ref(acc, delta, factor):
+    return acc.astype(jnp.float32) + factor * delta.astype(jnp.float32)
+
+
+def clip_factor_ref(sumsq, clip_norm: float):
+    norm = jnp.sqrt(sumsq)
+    return jnp.minimum(1.0, clip_norm / jnp.maximum(norm, 1e-12))

@@ -1,0 +1,42 @@
+"""jit'd wrapper: GQA (B,S,H,hd) layout → Pallas flash attention."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import (
+    BLOCK_K, BLOCK_Q, flash_attention_bhsd)
+
+
+def _pad_seq(x, block, axis):
+    pad = (-x.shape[axis]) % block
+    if pad == 0:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), pad
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    interpret: bool = True):
+    """q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd); GQA broadcast inside.
+    Returns (B, Sq, H, hd)."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qt = q.transpose(0, 2, 1, 3)
+    kt = jnp.repeat(k.transpose(0, 2, 1, 3), G, axis=1)
+    vt = jnp.repeat(v.transpose(0, 2, 1, 3), G, axis=1)
+    Sk_true = k.shape[1]
+    qt, pq = _pad_seq(qt, BLOCK_Q, 2)
+    kt, _ = _pad_seq(kt, BLOCK_K, 2)
+    vt, _ = _pad_seq(vt, BLOCK_K, 2)
+    # padded KV positions are masked by the TRUE seq_k inside the kernel
+    out = flash_attention_bhsd(qt, kt, vt, causal=causal, window=window,
+                               seq_k=Sk_true, interpret=interpret)
+    if pq:
+        out = out[:, :, :Sq, :]
+    return out.transpose(0, 2, 1, 3)

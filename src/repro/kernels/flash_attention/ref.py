@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for flash attention (full-softmax, same masks)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: (B,H,Sq,hd); k,v: (B,H,Sk,hd) → (B,H,Sq,hd)."""
+    hd = q.shape[-1]
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(hd)
+    Sq, Sk = scores.shape[-2:]
+    q_idx = jnp.arange(Sq)[:, None]
+    k_idx = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= k_idx <= q_idx
+    if window > 0:
+        mask &= k_idx > q_idx - window
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,29 @@
+"""jit'd wrapper for the chunked SSD Pallas kernel (pads S to CHUNK)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.ssd_scan import CHUNK, ssd_scan_kernel
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def ssd_scan(x, dt, Bm, Cm, A, *, interpret: bool = True):
+    """x: (B,S,H,p); dt: (B,S,H); Bm,Cm: (B,S,N); A: (H,).
+    Returns (y (B,S,H,p) f32, final_state (B,H,p,N) f32)."""
+    S = x.shape[1]
+    pad = (-S) % CHUNK
+    if pad:
+        widths = lambda nd: [(0, pad) if i == 1 else (0, 0) for i in range(nd)]
+        x = jnp.pad(x, widths(4))
+        dt = jnp.pad(dt, widths(3))   # dt=0 ⇒ identity recurrence on padding
+        Bm = jnp.pad(Bm, widths(3))
+        Cm = jnp.pad(Cm, widths(3))
+    y, state = ssd_scan_kernel(x.astype(jnp.float32), dt.astype(jnp.float32),
+                               Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+                               A.astype(jnp.float32), interpret=interpret)
+    if pad:
+        y = y[:, :S]
+    return y, state

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle: sequential (token-by-token) SSD recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(x, dt, Bm, Cm, A, h0=None):
+    """Sequential evaluation of h_t = e^{A·dt_t} h_{t-1} + dt_t·B_t⊗x_t,
+    y_t = C_t·h_t. Same shapes as the kernel. Returns (y, final_state)."""
+    Bsz, S, H, p = x.shape
+    N = Bm.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, p, N), jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp   # (B,H,p), (B,H), (B,N), (B,N)
+        decay = jnp.exp(dtt * A[None, :])                      # (B,H)
+        dBx = jnp.einsum("bh,bn,bhp->bhpn", dtt, bt, xt)
+        h = decay[:, :, None, None] * h + dBx
+        y = jnp.einsum("bn,bhpn->bhp", ct, h)
+        return h, y
+
+    xs = (x.transpose(1, 0, 2, 3).astype(jnp.float32),
+          dt.transpose(1, 0, 2).astype(jnp.float32),
+          Bm.transpose(1, 0, 2).astype(jnp.float32),
+          Cm.transpose(1, 0, 2).astype(jnp.float32))
+    h_fin, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2, 3), h_fin

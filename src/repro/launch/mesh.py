@@ -1,0 +1,23 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state. Single pod: (data=16, model=16) = 256 chips of a
+v5e pod. Multi-pod: (pod=2, data=16, model=16) = 512 chips; clients shard
+across pods, params replicate across pods (hybrid FSDP), so only the
+DP-FedAvg round reduction crosses the inter-pod links.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.configs.base import MULTI_POD, SINGLE_POD, MeshConfig
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_config(*, multi_pod: bool = False) -> MeshConfig:
+    return MULTI_POD if multi_pod else SINGLE_POD

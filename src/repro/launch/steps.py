@@ -1,0 +1,231 @@
+"""Production-shape distributed steps: DP-FedAvg training round, prefill,
+and decode — the units the multi-pod dry-run lowers and compiles.
+
+``fed_train_step`` is Algorithm 1 at production shape: the global batch of
+``train_4k`` is 256 *clients* (one local E=1 step each). Clients are laid
+out one-per-(pod×data)-row; a ``lax.scan`` over client microbatches keeps
+only ONE client's gradients live per device at a time; each client's update
+is global-L2-clipped (f32 norm over the model-sharded pytree → psum) and
+accumulated into an FSDP×TP-sharded f32 round sum; the round ends with the
+1/qN average, f32 Gaussian noise (σ = zS/qN), and the Nesterov-momentum
+server update. This mirrors how the production system's trusted aggregator
+applies the mechanism, with the mesh playing the fleet (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import DPConfig, InputShape, MeshConfig, ModelConfig
+from repro.core.server_optim import ServerOptState
+from repro.models.api import Model
+from repro.sharding import specs as SP
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins — no device allocation)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Model inputs for one step of the given input shape (dry-run stand-ins)."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    bf16 = jnp.bfloat16
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        out = {"tokens": sds((b, s), i32), "labels": sds((b, s), i32)}
+        if cfg.family == "encdec":
+            out["frames"] = sds((b, cfg.n_audio_frames, cfg.d_model), bf16)
+        if cfg.family == "vlm":
+            out["image_embeds"] = sds((b, cfg.n_image_tokens, cfg.d_model), bf16)
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": sds((b, s), i32)}
+        if cfg.family == "encdec":
+            out["frames"] = sds((b, cfg.n_audio_frames, cfg.d_model), bf16)
+        if cfg.family == "vlm":
+            out["image_embeds"] = sds((b, cfg.n_image_tokens, cfg.d_model), bf16)
+        return out
+    # decode: one new token against a seq_len cache
+    return {"tokens": sds((b,), i32)}
+
+
+def cache_shape(model: Model, shape: InputShape):
+    return jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len))
+
+
+def params_shape(model: Model):
+    return jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+
+def opt_state_shape(params_sh):
+    f32 = lambda t: jax.tree_util.tree_map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, jnp.float32), t)
+    return ServerOptState(momentum=f32(params_sh), nu=f32(params_sh),
+                          count=jax.ShapeDtypeStruct((), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# DP-FedAvg production train step
+# ---------------------------------------------------------------------------
+
+
+def make_fed_train_step(model: Model, dp: DPConfig, mesh, mesh_cfg: MeshConfig,
+                        pspecs, shape: InputShape, *, client_lr: float = 0.5,
+                        donate: bool = True, clients_per_row: int = 1):
+    """Returns a jit'd (params, opt_state, batch, key) → (params, opt_state,
+    metrics) with full in/out shardings attached.
+
+    ``clients_per_row`` > 1 vmaps several clients per data-parallel row per
+    microbatch — fewer microbatch iterations ⇒ fewer FSDP weight gathers
+    (the dominant collective term), at the cost of holding that many
+    per-client grad pytrees per device (§Perf iteration C4)."""
+    rows = SP.batch_axis_size(mesh_cfg) * clients_per_row
+    C = shape.global_batch
+    assert C % rows == 0, (C, rows)
+    n_micro = C // rows
+    clip_S = dp.clip_norm
+    mu = dp.server_momentum
+    lr_s = dp.server_lr
+
+    ns = lambda spec: NamedSharding(mesh, spec)
+    pspecs_ns = jax.tree_util.tree_map(ns, pspecs)
+    bspecs = SP.batch_specs(model.cfg, shape, mesh_cfg)
+
+    def constrain(tree):
+        return jax.tree_util.tree_map(
+            lambda l, s: jax.lax.with_sharding_constraint(l, ns(s)),
+            tree, pspecs)
+
+    # HILLCLIMB(per-client-grad-shard): inside the client vmap the data axis
+    # is taken by the client dimension, and GSPMD was dropping the MODEL
+    # sharding of the per-client gradient pytrees — each device held a full
+    # unsharded grad copy (phi3-medium train_4k: 33.7 GiB/chip temp). Pin
+    # the tensor-parallel dims explicitly (FSDP dim → None under vmap).
+    dp_axes = SP.batch_axes(mesh_cfg)
+
+    def _client_grad_spec(spec):
+        def one(e):
+            if e == SP.FSDP:
+                return None
+            if isinstance(e, tuple):
+                kept = tuple(a for a in e if a != SP.FSDP)
+                return kept if kept else None
+            return e
+        # leading dim = the vmapped client axis, sharded over data(/pod)
+        return P(dp_axes, *[one(e) for e in spec])
+
+    grad_specs = jax.tree_util.tree_map(_client_grad_spec, pspecs)
+
+    def step(params, opt_state, batch, key):
+        cast = lambda l: l.astype(jnp.bfloat16) if l.dtype == jnp.float32 else l
+        params_c = jax.tree_util.tree_map(cast, params)
+
+        resh = lambda a: a.reshape((n_micro, rows, 1) + a.shape[1:])
+        micro = jax.tree_util.tree_map(resh, batch)
+
+        def per_client(cb):
+            loss, g = jax.value_and_grad(model.loss_fn)(params_c, cb)
+            ss = sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                     for x in jax.tree_util.tree_leaves(g))
+            norm = jnp.sqrt(ss) * client_lr          # ‖Δ‖ = η_c‖g‖ (E=1)
+            factor = jnp.minimum(1.0, clip_S / jnp.maximum(norm, 1e-12))
+            return g, norm, (factor < 1.0).astype(jnp.float32), loss, factor
+
+        def micro_step(carry, mb):
+            acc, msum, csum, lsum = carry
+            gs, norms, clipped, losses, factors = jax.vmap(per_client)(mb)
+            gs = jax.tree_util.tree_map(
+                lambda x, s: jax.lax.with_sharding_constraint(x, ns(s)),
+                gs, grad_specs)
+            w = factors * (-client_lr)               # clip ∘ (Δ = −η_c g)
+            # reduce straight into the FSDP×TP layout: the weighted client
+            # sum is data-partial; pinning the einsum output to the param
+            # spec makes GSPMD reduce-scatter instead of materializing an
+            # f32 model-sharded-only partial (params/16 per microbatch).
+            contrib = jax.tree_util.tree_map(
+                lambda g, s: jax.lax.with_sharding_constraint(
+                    jnp.einsum("c,c...->...", w, g,
+                               preferred_element_type=jnp.float32), ns(s)),
+                gs, pspecs)
+            acc = constrain(jax.tree_util.tree_map(jnp.add, acc, contrib))
+            return (acc, msum + jnp.sum(norms), csum + jnp.sum(clipped),
+                    lsum + jnp.sum(losses)), None
+
+        zeros = constrain(jax.tree_util.tree_map(
+            lambda l: jnp.zeros(l.shape, jnp.float32), params))
+        (acc, msum, csum, lsum), _ = jax.lax.scan(
+            micro_step, (zeros, jnp.zeros(()), jnp.zeros(()), jnp.zeros(())),
+            micro)
+
+        # Algorithm 1 server side: average, f32 noise, Nesterov momentum.
+        sigma = dp.noise_multiplier * clip_S / C
+        leaves, treedef = jax.tree_util.tree_flatten(acc)
+        keys = jax.random.split(key, len(leaves))
+        noised = [l / C + sigma * jax.random.normal(k, l.shape, jnp.float32)
+                  for l, k in zip(leaves, keys)]
+        delta = jax.tree_util.tree_unflatten(treedef, noised)
+        new_m = jax.tree_util.tree_map(
+            lambda m, d: mu * m + d, opt_state.momentum, delta)
+        step_tree = jax.tree_util.tree_map(
+            lambda m, d: mu * m + d, new_m, delta)       # Nesterov
+        new_params = jax.tree_util.tree_map(
+            lambda p, s: (p.astype(jnp.float32) + lr_s * s).astype(p.dtype),
+            params, step_tree)
+        new_state = opt_state._replace(momentum=new_m,
+                                       count=opt_state.count + 1)
+        metrics = {"loss": lsum / C, "mean_update_norm": msum / C,
+                   "frac_clipped": csum / C, "noise_std": sigma}
+        return new_params, new_state, metrics
+
+    opt_specs = ServerOptState(momentum=pspecs, nu=pspecs, count=P())
+    in_sh = (pspecs_ns, jax.tree_util.tree_map(ns, opt_specs),
+             jax.tree_util.tree_map(ns, bspecs), ns(P()))
+    out_sh = (pspecs_ns, jax.tree_util.tree_map(ns, opt_specs),
+              ns(P()))
+    return jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                   donate_argnums=(0, 1) if donate else ())
+
+
+# ---------------------------------------------------------------------------
+# serving steps
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_step(model: Model, mesh, mesh_cfg: MeshConfig, pspecs,
+                      shape: InputShape):
+    ns = lambda spec: NamedSharding(mesh, spec)
+    bspecs = SP.batch_specs(model.cfg, shape, mesh_cfg)
+    bspecs.pop("labels", None)
+    c_sh = SP.cache_specs(cache_shape(model, shape), model.cfg, shape, mesh_cfg)
+    dp = SP.batch_axes(mesh_cfg)
+    b_ok = shape.global_batch % SP.batch_axis_size(mesh_cfg) == 0
+    logits_spec = P(dp if b_ok else None, "model")
+    in_sh = (jax.tree_util.tree_map(ns, pspecs),
+             jax.tree_util.tree_map(ns, bspecs))
+    out_sh = (ns(logits_spec), jax.tree_util.tree_map(ns, c_sh))
+    return jax.jit(lambda p, b: model.prefill(p, b),
+                   in_shardings=in_sh, out_shardings=out_sh)
+
+
+def make_decode_step(model: Model, mesh, mesh_cfg: MeshConfig, pspecs,
+                     shape: InputShape, *, donate: bool = True):
+    ns = lambda spec: NamedSharding(mesh, spec)
+    c_sh = SP.cache_specs(cache_shape(model, shape), model.cfg, shape, mesh_cfg)
+    c_ns = jax.tree_util.tree_map(ns, c_sh)
+    dp = SP.batch_axes(mesh_cfg)
+    b_ok = shape.global_batch % SP.batch_axis_size(mesh_cfg) == 0
+    tok_spec = P(dp) if b_ok else P(None)
+    logits_spec = P(dp if b_ok else None, "model")
+    in_sh = (jax.tree_util.tree_map(ns, pspecs), ns(tok_spec), c_ns)
+    out_sh = (ns(logits_spec), c_ns)
+    return jax.jit(lambda p, t, c: model.decode_step(p, t, c),
+                   in_shardings=in_sh, out_shardings=out_sh,
+                   donate_argnums=(2,) if donate else ())

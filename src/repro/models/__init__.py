@@ -1,0 +1,4 @@
+from repro.models.api import Model
+from repro.models.registry import build
+
+__all__ = ["Model", "build"]

@@ -1,0 +1,20 @@
+"""Unified model interface: every family exposes the same six functions.
+
+The DP-FedAvg machinery and the launch layer only ever touch this interface,
+so the paper's technique is architecture-agnostic by construction.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+from repro.configs.base import ModelConfig
+
+
+class Model(NamedTuple):
+    cfg: ModelConfig
+    init: Callable[..., Any]                 # (key) -> params
+    forward: Callable[..., Any]              # (params, batch) -> logits (B,S,Vpad)
+    loss_fn: Callable[..., Any]              # (params, batch) -> scalar f32
+    init_cache: Callable[..., Any]           # (batch_size, max_len) -> cache pytree
+    prefill: Callable[..., Any]              # (params, batch) -> (logits, cache)
+    decode_step: Callable[..., Any]          # (params, tokens (B,), cache) -> (logits (B,Vpad), cache)

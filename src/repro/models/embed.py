@@ -1,0 +1,32 @@
+"""Token embedding / LM head with Megatron-style padded vocab.
+
+The vocab is padded to a multiple of 256 so the vocab axis always shards
+evenly over a 16-way model axis; the loss masks padded columns.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import embed_init, pad_vocab
+
+
+def embedding_init(key, cfg: ModelConfig):
+    vpad = pad_vocab(cfg.vocab)
+    k1, k2 = jax.random.split(key)
+    p = {"tok": embed_init(k1, (vpad, cfg.d_model))}
+    if not cfg.tie_embeddings:
+        p["head"] = embed_init(k2, (vpad, cfg.d_model))
+    return p
+
+
+def embed_tokens(p, tokens, compute_dtype):
+    return jnp.take(p["tok"], tokens, axis=0).astype(compute_dtype)
+
+
+def lm_logits(p, x):
+    """x: (B, S, d) → logits (B, S, Vpad) in f32."""
+    w = p.get("head", p["tok"])
+    return jnp.einsum("bsd,vd->bsv", x, w.astype(x.dtype),
+                      preferred_element_type=jnp.float32)

@@ -1,0 +1,228 @@
+"""Whisper-style encoder-decoder [arXiv:2212.04356] — whisper-small.
+
+Transformer backbone only: the mel-spectrogram + conv feature extractor is a
+STUB; the batch carries precomputed frame embeddings (B, n_frames, d). Pre-LN
+layernorm + GELU, sinusoidal positions (no RoPE), MHA decoder with causal
+self-attention and cross-attention to the encoder memory.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.api import Model
+from repro.models.embed import embed_tokens, embedding_init, lm_logits
+
+
+def _xattn_init(key, cfg: ModelConfig):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d, H, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    return {
+        "wq": L.dense_init(k1, (d, H * hd)),
+        "wk": L.dense_init(k2, (d, cfg.n_kv_heads * hd)),
+        "wv": L.dense_init(k3, (d, cfg.n_kv_heads * hd)),
+        "wo": L.dense_init(k4, (H * hd, d), in_dim=H * hd),
+    }
+
+
+def _enc_layer_init(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.norm_init(cfg.d_model, cfg.norm),
+        "attn": L.gqa_init(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim),
+        "ln2": L.norm_init(cfg.d_model, cfg.norm),
+        "mlp": L.mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.act),
+    }
+
+
+def _dec_layer_init(key, cfg: ModelConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": L.norm_init(cfg.d_model, cfg.norm),
+        "self_attn": L.gqa_init(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim),
+        "ln_x": L.norm_init(cfg.d_model, cfg.norm),
+        "cross_attn": _xattn_init(k2, cfg),
+        "ln2": L.norm_init(cfg.d_model, cfg.norm),
+        "mlp": L.mlp_init(k3, cfg.d_model, cfg.d_ff, cfg.act),
+    }
+
+
+def init(key, cfg: ModelConfig):
+    ke, kenc, kdec = jax.random.split(key, 3)
+    enc_keys = jax.random.split(kenc, cfg.n_enc_layers)
+    dec_keys = jax.random.split(kdec, cfg.n_layers)
+    return {
+        "embed": embedding_init(ke, cfg),
+        "enc_layers": jax.vmap(partial(_enc_layer_init, cfg=cfg))(enc_keys),
+        "ln_enc": L.norm_init(cfg.d_model, cfg.norm),
+        "dec_layers": jax.vmap(partial(_dec_layer_init, cfg=cfg))(dec_keys),
+        "ln_f": L.norm_init(cfg.d_model, cfg.norm),
+    }
+
+
+def encode(params, frames, cfg: ModelConfig, *, remat: bool = False):
+    """frames: (B, F, d) precomputed frame embeddings (stub frontend)."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    F = frames.shape[1]
+    x = frames.astype(cd) + L.sinusoidal_positions(F, cfg.d_model).astype(cd)[None]
+    positions = jnp.arange(F, dtype=jnp.int32)
+
+    def body(c, lp):
+        h = L.norm(c, lp["ln1"], cfg.norm)
+        q, k, v = L.gqa_project(h, lp["attn"], cfg.n_heads, cfg.n_kv_heads,
+                                cfg.head_dim, positions, 0.0)
+        a = L.attention(q, k, v, q_positions=positions, kv_positions=positions,
+                        causal=False)
+        B = a.shape[0]
+        c = c + a.reshape(B, F, -1) @ lp["attn"]["wo"].astype(c.dtype)
+        h2 = L.norm(c, lp["ln2"], cfg.norm)
+        c = c + L.mlp(h2, lp["mlp"], cfg.act)
+        return c, None
+
+    fn = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(fn, x, params["enc_layers"])
+    return L.norm(x, params["ln_enc"], cfg.norm)
+
+
+def _cross_attend(x, memory_kv, lp, cfg: ModelConfig):
+    """x: (B,Sq,d); memory_kv: (mk, mv) each (B,F,KV,hd)."""
+    mk, mv = memory_kv
+    B, Sq, _ = x.shape
+    h = L.norm(x, lp["ln_x"], cfg.norm)
+    q = (h @ lp["cross_attn"]["wq"].astype(h.dtype)).reshape(
+        B, Sq, cfg.n_heads, cfg.head_dim)
+    F = mk.shape[1]
+    a = L.attention(q, mk, mv,
+                    q_positions=jnp.zeros((Sq,), jnp.int32),
+                    kv_positions=jnp.arange(F, dtype=jnp.int32),
+                    causal=False)
+    return x + a.reshape(B, Sq, -1) @ lp["cross_attn"]["wo"].astype(x.dtype)
+
+
+def _memory_kv(memory, lp, cfg: ModelConfig):
+    B, F, _ = memory.shape
+    mk = (memory @ lp["cross_attn"]["wk"].astype(memory.dtype)).reshape(
+        B, F, cfg.n_kv_heads, cfg.head_dim)
+    mv = (memory @ lp["cross_attn"]["wv"].astype(memory.dtype)).reshape(
+        B, F, cfg.n_kv_heads, cfg.head_dim)
+    return mk, mv
+
+
+def _dec_layer_fwd(x, lp, memory, cfg: ModelConfig, positions, *, window,
+                   collect_cache):
+    h = L.norm(x, lp["ln1"], cfg.norm)
+    q, k, v = L.gqa_project(h, lp["self_attn"], cfg.n_heads, cfg.n_kv_heads,
+                            cfg.head_dim, positions, 0.0)
+    a = L.attention(q, k, v, q_positions=positions, kv_positions=positions,
+                    causal=True, window=window)
+    B, S = x.shape[:2]
+    x = x + a.reshape(B, S, -1) @ lp["self_attn"]["wo"].astype(x.dtype)
+    mkv = _memory_kv(memory, lp, cfg)
+    x = _cross_attend(x, mkv, lp, cfg)
+    h2 = L.norm(x, lp["ln2"], cfg.norm)
+    x = x + L.mlp(h2, lp["mlp"], cfg.act)
+    return x, ((k, v, mkv[0], mkv[1]) if collect_cache else None)
+
+
+def forward(params, batch, cfg: ModelConfig, *, remat: bool = False,
+            collect_cache: bool = False):
+    """batch: {frames (B,F,d), tokens (B,S), labels (B,S)}."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    memory = encode(params, batch["frames"], cfg, remat=remat)
+    S = batch["tokens"].shape[1]
+    x = embed_tokens(params["embed"], batch["tokens"], cd)
+    x = x + L.sinusoidal_positions(S, cfg.d_model).astype(cd)[None]
+    positions = jnp.arange(S, dtype=jnp.int32)
+
+    def body(c, lp):
+        return _dec_layer_fwd(c, lp, memory, cfg, positions,
+                              window=cfg.attn_window,
+                              collect_cache=collect_cache)
+
+    fn = jax.checkpoint(body) if remat else body
+    x, caches = jax.lax.scan(fn, x, params["dec_layers"])
+    x = L.norm(x, params["ln_f"], cfg.norm)
+    logits = lm_logits(params["embed"], x)
+    return (logits, caches) if collect_cache else logits
+
+
+def loss_fn(params, batch, cfg: ModelConfig, *, remat: bool = True):
+    logits = forward(params, batch, cfg, remat=remat)
+    return L.lm_loss(logits, batch["labels"], cfg.vocab, batch.get("mask"))
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int):
+    from repro.models.transformer import cache_len
+    cd = jnp.dtype(cfg.compute_dtype)
+    kv = (cfg.n_layers, batch_size, cache_len(cfg, max_len),
+          cfg.n_kv_heads, cfg.head_dim)
+    xkv = (cfg.n_layers, batch_size, cfg.n_audio_frames, cfg.n_kv_heads,
+           cfg.head_dim)
+    return {"k": jnp.zeros(kv, cd), "v": jnp.zeros(kv, cd),
+            "xk": jnp.zeros(xkv, cd), "xv": jnp.zeros(xkv, cd),
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def prefill(params, batch, cfg: ModelConfig, *, max_len: int = None):
+    from repro.models.transformer import _fit_kv
+    logits, (ks, vs, xks, xvs) = forward(params, batch, cfg, collect_cache=True)
+    cache = {"k": _fit_kv(ks, cfg, max_len), "v": _fit_kv(vs, cfg, max_len),
+             "xk": xks, "xv": xvs,
+             "pos": jnp.asarray(batch["tokens"].shape[1], jnp.int32)}
+    return logits[:, -1, :], cache
+
+
+def decode_step(params, tokens, cache, cfg: ModelConfig):
+    cd = jnp.dtype(cfg.compute_dtype)
+    pos = cache["pos"]
+    x = embed_tokens(params["embed"], tokens[:, None], cd)
+    x = x + L.sinusoidal_position_at(pos, cfg.d_model).astype(cd)[None]
+    max_len = cache["k"].shape[2]
+    ring = cfg.attn_window > 0 and max_len <= cfg.attn_window
+    if ring:
+        kv_positions = L.ring_positions(pos, max_len)
+        write = jnp.mod(pos, max_len)
+    else:
+        kv_positions = jnp.arange(max_len, dtype=jnp.int32)
+        write = pos
+    q_positions = pos[None]
+
+    def body(xc, inp):
+        lp, kc, vc, xk, xv = inp
+        h = L.norm(xc, lp["ln1"], cfg.norm)
+        q, k, v = L.gqa_project(h, lp["self_attn"], cfg.n_heads, cfg.n_kv_heads,
+                                cfg.head_dim, q_positions, 0.0)
+        kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype), (0, write, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype), (0, write, 0, 0))
+        a = L.attention(q, kc, vc, q_positions=q_positions,
+                        kv_positions=kv_positions, kv_len=pos + 1,
+                        causal=True, window=cfg.attn_window)
+        B = a.shape[0]
+        xc = xc + a.reshape(B, 1, -1) @ lp["self_attn"]["wo"].astype(xc.dtype)
+        xc = _cross_attend(xc, (xk, xv), lp, cfg)
+        h2 = L.norm(xc, lp["ln2"], cfg.norm)
+        xc = xc + L.mlp(h2, lp["mlp"], cfg.act)
+        return xc, (kc, vc)
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["dec_layers"], cache["k"],
+                                         cache["v"], cache["xk"], cache["xv"]))
+    x = L.norm(x, params["ln_f"], cfg.norm)
+    logits = lm_logits(params["embed"], x)[:, 0, :]
+    return logits, {"k": ks, "v": vs, "xk": cache["xk"], "xv": cache["xv"],
+                    "pos": pos + 1}
+
+
+def build(cfg: ModelConfig) -> Model:
+    return Model(
+        cfg=cfg,
+        init=partial(init, cfg=cfg),
+        forward=partial(forward, cfg=cfg),
+        loss_fn=partial(loss_fn, cfg=cfg),
+        init_cache=partial(init_cache, cfg),
+        prefill=partial(prefill, cfg=cfg),
+        decode_step=partial(decode_step, cfg=cfg),
+    )

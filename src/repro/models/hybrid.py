@@ -1,0 +1,190 @@
+"""Zamba2-style hybrid [arXiv:2411.15242]: a Mamba-2 backbone with a single
+*shared* GQA attention+MLP block interleaved every ``hybrid_attn_every``
+mamba layers (weights shared across sites, distinct KV cache per site).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import mamba2 as M
+from repro.models.api import Model
+from repro.models.embed import embed_tokens, embedding_init, lm_logits
+
+
+def n_attn_sites(cfg: ModelConfig) -> int:
+    assert cfg.n_layers % cfg.hybrid_attn_every == 0, (
+        cfg.n_layers, cfg.hybrid_attn_every)
+    return cfg.n_layers // cfg.hybrid_attn_every
+
+
+def init(key, cfg: ModelConfig):
+    ke, kl, ka, km = jax.random.split(key, 4)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    return {
+        "embed": embedding_init(ke, cfg),
+        "mamba_layers": jax.vmap(partial(M._layer_init, cfg=cfg))(layer_keys),
+        "shared_attn": {
+            "ln1": L.norm_init(cfg.d_model, cfg.norm),
+            "attn": L.gqa_init(ka, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.head_dim),
+            "ln2": L.norm_init(cfg.d_model, cfg.norm),
+            "mlp": L.mlp_init(km, cfg.d_model, cfg.d_ff, cfg.act),
+        },
+        "ln_f": L.norm_init(cfg.d_model, "rmsnorm"),
+    }
+
+
+def _group_params(params, cfg: ModelConfig):
+    """Reshape stacked (n_layers, ...) mamba params → (sites, every, ...)."""
+    g, e = n_attn_sites(cfg), cfg.hybrid_attn_every
+    return jax.tree_util.tree_map(
+        lambda a: a.reshape((g, e) + a.shape[1:]), params["mamba_layers"])
+
+
+def _shared_attn_fwd(x, sp, cfg: ModelConfig, positions, *, window):
+    h = L.norm(x, sp["ln1"], cfg.norm)
+    q, k, v = L.gqa_project(h, sp["attn"], cfg.n_heads, cfg.n_kv_heads,
+                            cfg.head_dim, positions, cfg.rope_theta)
+    a = L.attention(q, k, v, q_positions=positions, kv_positions=positions,
+                    causal=True, window=window)
+    B, S, _, _ = a.shape
+    x = x + a.reshape(B, S, -1) @ sp["attn"]["wo"].astype(x.dtype)
+    h2 = L.norm(x, sp["ln2"], cfg.norm)
+    x = x + L.mlp(h2, sp["mlp"], cfg.act)
+    return x, (k, v)
+
+
+def forward(params, batch, cfg: ModelConfig, *, remat: bool = False,
+            collect_cache: bool = False):
+    cd = jnp.dtype(cfg.compute_dtype)
+    x = embed_tokens(params["embed"], batch["tokens"], cd)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    grouped = _group_params(params, cfg)
+    sp = params["shared_attn"]
+
+    def group_body(carry, glp):
+        def mamba_body(c, lp):
+            h = L.norm(c, lp["ln"], "rmsnorm")
+            if collect_cache:
+                out, h_fin, tail = M.mixer_fwd(h, lp["mixer"], cfg,
+                                               return_state=True)
+                return c + out, (h_fin, tail)
+            return c + M.mixer_fwd(h, lp["mixer"], cfg), None
+
+        y, mcache = jax.lax.scan(mamba_body, carry, glp)
+        y, kv = _shared_attn_fwd(y, sp, cfg, positions, window=cfg.attn_window)
+        return y, (mcache, kv) if collect_cache else None
+
+    fn = jax.checkpoint(group_body) if remat else group_body
+    x, caches = jax.lax.scan(fn, x, grouped)
+    x = L.norm(x, params["ln_f"], "rmsnorm")
+    logits = lm_logits(params["embed"], x)
+    return (logits, caches) if collect_cache else logits
+
+
+def loss_fn(params, batch, cfg: ModelConfig, *, remat: bool = True):
+    logits = forward(params, batch, cfg, remat=remat)
+    return L.lm_loss(logits, batch["labels"], cfg.vocab, batch.get("mask"))
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int):
+    di, N, H = M.d_inner(cfg), cfg.ssm_state, cfg.ssm_heads
+    hp = di // H
+    W = cfg.ssm_conv_width
+    g = n_attn_sites(cfg)
+    cd = jnp.dtype(cfg.compute_dtype)
+    Lr = cfg.n_layers
+    return {
+        "ssm": jnp.zeros((Lr, batch_size, H, hp, N), jnp.float32),
+        "conv_x": jnp.zeros((Lr, batch_size, W - 1, di), cd),
+        "conv_B": jnp.zeros((Lr, batch_size, W - 1, N), cd),
+        "conv_C": jnp.zeros((Lr, batch_size, W - 1, N), cd),
+        "k": jnp.zeros((g, batch_size, max_len, cfg.n_kv_heads, cfg.head_dim), cd),
+        "v": jnp.zeros((g, batch_size, max_len, cfg.n_kv_heads, cfg.head_dim), cd),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(params, batch, cfg: ModelConfig, *, max_len: int = None):
+    from repro.models.transformer import _pad_kv
+    g, e = n_attn_sites(cfg), cfg.hybrid_attn_every
+    logits, ((h_fins, tails), (ks, vs)) = forward(params, batch, cfg,
+                                                  collect_cache=True)
+    cd = jnp.dtype(cfg.compute_dtype)
+    flat = lambda a: a.reshape((g * e,) + a.shape[2:])
+    cx, cB, cC = tails
+    cache = {"ssm": flat(h_fins), "conv_x": flat(cx).astype(cd),
+             "conv_B": flat(cB).astype(cd), "conv_C": flat(cC).astype(cd),
+             "k": _pad_kv(ks, max_len), "v": _pad_kv(vs, max_len),
+             "pos": jnp.asarray(batch["tokens"].shape[1], jnp.int32)}
+    return logits[:, -1, :], cache
+
+
+def decode_step(params, tokens, cache, cfg: ModelConfig):
+    cd = jnp.dtype(cfg.compute_dtype)
+    g, e = n_attn_sites(cfg), cfg.hybrid_attn_every
+    pos = cache["pos"]
+    x = embed_tokens(params["embed"], tokens[:, None], cd)
+    grouped = _group_params(params, cfg)
+    sp = params["shared_attn"]
+    max_len = cache["k"].shape[2]
+    kv_positions = jnp.arange(max_len, dtype=jnp.int32)
+    q_positions = pos[None]
+    reshape_g = lambda a: a.reshape((g, e) + a.shape[1:])
+    ssm_g = reshape_g(cache["ssm"])
+    cx_g, cB_g, cC_g = (reshape_g(cache["conv_x"]), reshape_g(cache["conv_B"]),
+                        reshape_g(cache["conv_C"]))
+
+    def group_body(carry, inp):
+        glp, ssm_l, cx_l, cB_l, cC_l, kc, vc = inp
+
+        def mamba_body(c, lpc):
+            lp, h, cx, cB, cC = lpc
+            hin = L.norm(c, lp["ln"], "rmsnorm")
+            out, h_new, (cxn, cBn, cCn) = M.mixer_step(hin, lp["mixer"], cfg,
+                                                       h, (cx, cB, cC))
+            return c + out, (h_new, cxn.astype(cxn.dtype), cBn, cCn)
+
+        y, (hs, cxs, cBs, cCs) = jax.lax.scan(
+            mamba_body, carry, (glp, ssm_l, cx_l, cB_l, cC_l))
+        h = L.norm(y, sp["ln1"], cfg.norm)
+        q, k, v = L.gqa_project(h, sp["attn"], cfg.n_heads, cfg.n_kv_heads,
+                                cfg.head_dim, q_positions, cfg.rope_theta)
+        kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype), (0, pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype), (0, pos, 0, 0))
+        a = L.attention(q, kc, vc, q_positions=q_positions,
+                        kv_positions=kv_positions, kv_len=pos + 1,
+                        causal=True, window=cfg.attn_window)
+        B = a.shape[0]
+        y = y + a.reshape(B, 1, -1) @ sp["attn"]["wo"].astype(y.dtype)
+        h2 = L.norm(y, sp["ln2"], cfg.norm)
+        y = y + L.mlp(h2, sp["mlp"], cfg.act)
+        return y, (hs, cxs, cBs, cCs, kc, vc)
+
+    x, (hs, cxs, cBs, cCs, ks, vs) = jax.lax.scan(
+        group_body, x, (grouped, ssm_g, cx_g, cB_g, cC_g,
+                        cache["k"], cache["v"]))
+    x = L.norm(x, params["ln_f"], "rmsnorm")
+    logits = lm_logits(params["embed"], x)[:, 0, :]
+    flat = lambda a: a.reshape((g * e,) + a.shape[2:])
+    return logits, {"ssm": flat(hs), "conv_x": flat(cxs),
+                    "conv_B": flat(cBs), "conv_C": flat(cCs),
+                    "k": ks, "v": vs, "pos": pos + 1}
+
+
+def build(cfg: ModelConfig) -> Model:
+    return Model(
+        cfg=cfg,
+        init=partial(init, cfg=cfg),
+        forward=partial(forward, cfg=cfg),
+        loss_fn=partial(loss_fn, cfg=cfg),
+        init_cache=partial(init_cache, cfg),
+        prefill=partial(prefill, cfg=cfg),
+        decode_step=partial(decode_step, cfg=cfg),
+    )

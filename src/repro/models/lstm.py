@@ -1,0 +1,107 @@
+"""The paper's production NWP model (§III-A): single-layer CIFG-LSTM [SSB14]
+with tied input-embedding/output-projection, ~1.3M parameters, 10k vocab.
+
+CIFG couples the input and forget gates (i = 1 − f), so there are three gate
+matrices (f, o, g). A linear projection maps the hidden state back to the
+embedding dimension so the tied embedding can produce logits.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.api import Model
+from repro.models.embed import embed_tokens, embedding_init, lm_logits
+
+
+def init(key, cfg: ModelConfig):
+    ke, kg, kp = jax.random.split(key, 3)
+    d, h = cfg.d_model, cfg.d_ff  # embedding dim, hidden size
+    return {
+        "embed": embedding_init(ke, cfg),
+        "w_gates": L.dense_init(kg, (d + h, 3 * h), in_dim=d + h),
+        "b_gates": jnp.zeros((3 * h,), jnp.float32),
+        "w_proj": L.dense_init(kp, (h, d), in_dim=h),
+    }
+
+
+def _cell(params, x_t, h, c, hidden: int):
+    """One CIFG step. x_t: (B, d); h, c: (B, hidden)."""
+    cd = x_t.dtype
+    z = jnp.concatenate([x_t, h.astype(cd)], axis=-1) @ params["w_gates"].astype(cd)
+    z = z.astype(jnp.float32) + params["b_gates"]
+    f = jax.nn.sigmoid(z[:, :hidden] + 1.0)   # forget-bias 1
+    o = jax.nn.sigmoid(z[:, hidden:2 * hidden])
+    g = jnp.tanh(z[:, 2 * hidden:])
+    c_new = f * c + (1.0 - f) * g             # CIFG: i = 1 − f
+    h_new = o * jnp.tanh(c_new)
+    return h_new, c_new
+
+
+def forward(params, batch, cfg: ModelConfig, *, remat: bool = False,
+            collect_cache: bool = False):
+    cd = jnp.dtype(cfg.compute_dtype)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    hidden = cfg.d_ff
+    x = embed_tokens(params["embed"], tokens, cd)  # (B,S,d)
+    h0 = jnp.zeros((B, hidden), jnp.float32)
+    c0 = jnp.zeros((B, hidden), jnp.float32)
+
+    def step(carry, x_t):
+        h, c = carry
+        h, c = _cell(params, x_t, h, c, hidden)
+        return (h, c), h
+
+    (h_fin, c_fin), hs = jax.lax.scan(step, (h0, c0), x.transpose(1, 0, 2))
+    hs = hs.transpose(1, 0, 2).astype(cd)          # (B,S,hidden)
+    y = hs @ params["w_proj"].astype(cd)           # (B,S,d)
+    logits = lm_logits(params["embed"], y)
+    if collect_cache:
+        return logits, (h_fin, c_fin)
+    return logits
+
+
+def loss_fn(params, batch, cfg: ModelConfig, *, remat: bool = True):
+    logits = forward(params, batch, cfg)
+    return L.lm_loss(logits, batch["labels"], cfg.vocab, batch.get("mask"))
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int):
+    h = cfg.d_ff
+    return {"h": jnp.zeros((batch_size, h), jnp.float32),
+            "c": jnp.zeros((batch_size, h), jnp.float32),
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def prefill(params, batch, cfg: ModelConfig, *, max_len: int = None):
+    del max_len  # recurrent state — nothing to pad
+    logits, (h, c) = forward(params, batch, cfg, collect_cache=True)
+    return logits[:, -1, :], {"h": h, "c": c,
+                              "pos": jnp.asarray(batch["tokens"].shape[1],
+                                                 jnp.int32)}
+
+
+def decode_step(params, tokens, cache, cfg: ModelConfig):
+    cd = jnp.dtype(cfg.compute_dtype)
+    x = embed_tokens(params["embed"], tokens[:, None], cd)[:, 0, :]
+    h, c = _cell(params, x, cache["h"], cache["c"], cfg.d_ff)
+    y = (h.astype(cd) @ params["w_proj"].astype(cd))[:, None, :]
+    logits = lm_logits(params["embed"], y)[:, 0, :]
+    return logits, {"h": h, "c": c, "pos": cache["pos"] + 1}
+
+
+def build(cfg: ModelConfig) -> Model:
+    return Model(
+        cfg=cfg,
+        init=partial(init, cfg=cfg),
+        forward=partial(forward, cfg=cfg),
+        loss_fn=partial(loss_fn, cfg=cfg),
+        init_cache=partial(init_cache, cfg),
+        prefill=partial(prefill, cfg=cfg),
+        decode_step=partial(decode_step, cfg=cfg),
+    )

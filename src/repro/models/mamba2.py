@@ -1,0 +1,285 @@
+"""Mamba-2 / SSD (state-space duality) blocks [arXiv:2405.21060] — mamba2-370m.
+
+The training/prefill path uses the *chunked SSD algorithm*: within a chunk the
+dual quadratic (attention-like) form runs on the MXU; across chunks a scalar
+decay recurrence carries the (H, p, N) state. The decode path is the O(1)
+recurrence. State is kept in f32.
+
+Layout: d_inner = expand·d_model; H = ssm_heads, p = head_dim, N = ssm_state;
+single B/C group (ngroups=1) as in the Mamba-2 defaults.
+
+Sharding note: the input projection is stored as *separate* z/x/B/C/dt
+matrices (not one packed matrix) so tensor-parallel sharding of the d_inner
+dimension never cuts across segments; the depthwise conv is likewise split
+per segment. This is a TPU/GSPMD adaptation recorded in DESIGN.md.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.api import Model
+from repro.models.embed import embed_tokens, embedding_init, lm_logits
+
+CHUNK = 128
+
+
+def d_inner(cfg: ModelConfig) -> int:
+    return cfg.ssm_expand * cfg.d_model
+
+
+def mixer_init(key, cfg: ModelConfig):
+    di, N, H = d_inner(cfg), cfg.ssm_state, cfg.ssm_heads
+    W = cfg.ssm_conv_width
+    ks = jax.random.split(key, 8)
+    dt = jnp.exp(jax.random.uniform(ks[0], (H,), jnp.float32)
+                 * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))  # inverse softplus
+    return {
+        "w_z": L.dense_init(ks[1], (cfg.d_model, di)),
+        "w_x": L.dense_init(ks[2], (cfg.d_model, di)),
+        "w_B": L.dense_init(ks[3], (cfg.d_model, N)),
+        "w_C": L.dense_init(ks[4], (cfg.d_model, N)),
+        "w_dt": L.dense_init(ks[5], (cfg.d_model, H)),
+        "conv_x": L.dense_init(ks[6], (W, di), in_dim=W),
+        "conv_B": L.dense_init(ks[7], (W, N), in_dim=W),
+        "conv_C": L.dense_init(jax.random.fold_in(key, 9), (W, N), in_dim=W),
+        "conv_b_x": jnp.zeros((di,), jnp.float32),
+        "conv_b_B": jnp.zeros((N,), jnp.float32),
+        "conv_b_C": jnp.zeros((N,), jnp.float32),
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "dt_bias": dt_bias,
+        "D": jnp.ones((H,), jnp.float32),
+        "norm": L.norm_init(di, "rmsnorm"),
+        "w_out": L.dense_init(jax.random.fold_in(key, 7), (di, cfg.d_model),
+                              in_dim=di),
+    }
+
+
+def _causal_conv(seq, w, b):
+    """Depthwise causal conv via shifted adds. seq: (B,S,C); w: (W,C)."""
+    W = w.shape[0]
+    out = seq * w[W - 1][None, None, :]
+    for i in range(W - 1):
+        shift = W - 1 - i
+        shifted = jnp.pad(seq, ((0, 0), (shift, 0), (0, 0)))[:, :-shift, :]
+        out = out + shifted * w[i][None, None, :]
+    return jax.nn.silu(out + b[None, None, :].astype(seq.dtype))
+
+
+def _proj(x, p, cfg: ModelConfig):
+    """x: (B,S,d) → z (B,S,di), x_raw (B,S,di), B_raw, C_raw (B,S,N),
+    dt (B,S,H) post-softplus."""
+    cd = x.dtype
+    z = x @ p["w_z"].astype(cd)
+    x_raw = x @ p["w_x"].astype(cd)
+    B_raw = x @ p["w_B"].astype(cd)
+    C_raw = x @ p["w_C"].astype(cd)
+    dt = jax.nn.softplus((x @ p["w_dt"].astype(cd)).astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])
+    return z, x_raw, B_raw, C_raw, dt
+
+
+def ssd_chunked(xh, dt, Bc, Cc, A, h0):
+    """Chunked SSD scan (pure-jnp; the Pallas kernel mirrors this math).
+
+    xh: (B,S,H,p); dt: (B,S,H) f32; Bc, Cc: (B,S,N); A: (H,) (negative);
+    h0: (B,H,p,N) f32 initial state. Returns y (B,S,H,p) f32, h_final.
+    """
+    Bsz, S, H, p = xh.shape
+    N = Bc.shape[-1]
+    Q = min(CHUNK, S)
+    assert S % Q == 0, (S, Q)
+    n = S // Q
+    f32 = lambda v: v.astype(jnp.float32)
+
+    def chunk_body(h, inp):
+        xc, dtc, bc, cc = inp  # (B,Q,H,p), (B,Q,H) f32, (B,Q,N), (B,Q,N)
+        a = dtc * A[None, None, :]                     # (B,Q,H), negative
+        cum = jnp.cumsum(a, axis=1)                    # (B,Q,H)
+        seg = cum[:, :, None, :] - cum[:, None, :, :]  # (B,Q,Q,H)
+        tri = jnp.tril(jnp.ones((Q, Q), bool))
+        Lmat = jnp.where(tri[None, :, :, None], jnp.exp(seg), 0.0)
+        scores = jnp.einsum("bqn,bsn->bqs", f32(cc), f32(bc))
+        w = scores[:, :, :, None] * Lmat * dtc[:, None, :, :]
+        y_intra = jnp.einsum("bqsh,bshp->bqhp", w, f32(xc))
+        y_inter = jnp.exp(cum)[..., None] * jnp.einsum(
+            "bqn,bhpn->bqhp", f32(cc), h)
+        decay_out = jnp.exp(cum[:, -1:, :] - cum)      # (B,Q,H)
+        dB = (dtc * decay_out)[..., None] * f32(bc)[:, :, None, :]
+        h_new = jnp.exp(cum[:, -1, :])[:, :, None, None] * h + jnp.einsum(
+            "bqhn,bqhp->bhpn", dB, f32(xc))
+        return h_new, (y_intra + y_inter)
+
+    xs = (xh.reshape(Bsz, n, Q, H, p).transpose(1, 0, 2, 3, 4),
+          dt.reshape(Bsz, n, Q, H).transpose(1, 0, 2, 3),
+          Bc.reshape(Bsz, n, Q, N).transpose(1, 0, 2, 3),
+          Cc.reshape(Bsz, n, Q, N).transpose(1, 0, 2, 3))
+    h_fin, ys = jax.lax.scan(chunk_body, h0, xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(Bsz, S, H, p)
+    return y, h_fin
+
+
+def mixer_fwd(x, p, cfg: ModelConfig, *, return_state: bool = False):
+    """Full-sequence mixer. x: (B,S,d)."""
+    di, N, H = d_inner(cfg), cfg.ssm_state, cfg.ssm_heads
+    hp = di // H
+    Bsz, S, _ = x.shape
+    cd = x.dtype
+    z, x_raw, B_raw, C_raw, dt = _proj(x, p, cfg)
+    xs = _causal_conv(x_raw, p["conv_x"].astype(cd), p["conv_b_x"])
+    Bc = _causal_conv(B_raw, p["conv_B"].astype(cd), p["conv_b_B"])
+    Cc = _causal_conv(C_raw, p["conv_C"].astype(cd), p["conv_b_C"])
+    xh = xs.reshape(Bsz, S, H, hp)
+    A = -jnp.exp(p["A_log"])
+    h0 = jnp.zeros((Bsz, H, hp, N), jnp.float32)
+    y, h_fin = ssd_chunked(xh, dt, Bc, Cc, A, h0)
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.astype(cd).reshape(Bsz, S, di)
+    y = y * jax.nn.silu(z)
+    y = L.rmsnorm(y, p["norm"]["scale"])
+    out = y @ p["w_out"].astype(cd)
+    if return_state:
+        W = cfg.ssm_conv_width
+        tails = (x_raw[:, -(W - 1):, :], B_raw[:, -(W - 1):, :],
+                 C_raw[:, -(W - 1):, :])
+        return out, h_fin, tails
+    return out
+
+
+def mixer_step(x, p, cfg: ModelConfig, h, conv_state):
+    """One-token recurrence. x: (B,1,d); h: (B,H,p,N) f32;
+    conv_state: (cx (B,W-1,di), cB (B,W-1,N), cC (B,W-1,N)) raw history."""
+    di, N, H = d_inner(cfg), cfg.ssm_state, cfg.ssm_heads
+    hp = di // H
+    Bsz = x.shape[0]
+    cd = x.dtype
+    z, x_raw, B_raw, C_raw, dt = _proj(x, p, cfg)
+    cx, cB, cC = conv_state
+
+    def conv1(hist, new, w, b):
+        full = jnp.concatenate([hist.astype(cd), new], axis=1)  # (B,W,C)
+        out = jnp.einsum("bwc,wc->bc", full, w.astype(cd)) + b.astype(cd)
+        return jax.nn.silu(out), full[:, 1:, :]
+
+    xs, cx_new = conv1(cx, x_raw, p["conv_x"], p["conv_b_x"])
+    Bc, cB_new = conv1(cB, B_raw, p["conv_B"], p["conv_b_B"])
+    Cc, cC_new = conv1(cC, C_raw, p["conv_C"], p["conv_b_C"])
+    xh = xs.reshape(Bsz, H, hp)
+    A = -jnp.exp(p["A_log"])
+    dts = dt[:, 0, :]                                  # (B,H)
+    decay = jnp.exp(dts * A[None, :])
+    dBx = jnp.einsum("bh,bn,bhp->bhpn", dts, Bc.astype(jnp.float32),
+                     xh.astype(jnp.float32))
+    h_new = decay[:, :, None, None] * h + dBx
+    y = jnp.einsum("bn,bhpn->bhp", Cc.astype(jnp.float32), h_new)
+    y = y + p["D"][None, :, None] * xh.astype(jnp.float32)
+    y = y.astype(cd).reshape(Bsz, 1, di)
+    y = y * jax.nn.silu(z)
+    y = L.rmsnorm(y, p["norm"]["scale"])
+    out = y @ p["w_out"].astype(cd)
+    return out, h_new, (cx_new, cB_new, cC_new)
+
+
+def _layer_init(key, cfg: ModelConfig):
+    return {"ln": L.norm_init(cfg.d_model, "rmsnorm"),
+            "mixer": mixer_init(key, cfg)}
+
+
+def init(key, cfg: ModelConfig):
+    ke, kl = jax.random.split(key)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    return {
+        "embed": embedding_init(ke, cfg),
+        "layers": jax.vmap(partial(_layer_init, cfg=cfg))(layer_keys),
+        "ln_f": L.norm_init(cfg.d_model, "rmsnorm"),
+    }
+
+
+def forward(params, batch, cfg: ModelConfig, *, remat: bool = False,
+            collect_cache: bool = False):
+    cd = jnp.dtype(cfg.compute_dtype)
+    x = embed_tokens(params["embed"], batch["tokens"], cd)
+
+    def body(carry, lp):
+        h = L.norm(carry, lp["ln"], "rmsnorm")
+        if collect_cache:
+            out, h_fin, tails = mixer_fwd(h, lp["mixer"], cfg,
+                                          return_state=True)
+            return carry + out, (h_fin, tails)
+        return carry + mixer_fwd(h, lp["mixer"], cfg), None
+
+    fn = jax.checkpoint(body) if remat else body
+    x, caches = jax.lax.scan(fn, x, params["layers"])
+    x = L.norm(x, params["ln_f"], "rmsnorm")
+    logits = lm_logits(params["embed"], x)
+    return (logits, caches) if collect_cache else logits
+
+
+def loss_fn(params, batch, cfg: ModelConfig, *, remat: bool = True):
+    logits = forward(params, batch, cfg, remat=remat)
+    return L.lm_loss(logits, batch["labels"], cfg.vocab, batch.get("mask"))
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int):
+    di, N, H = d_inner(cfg), cfg.ssm_state, cfg.ssm_heads
+    hp = di // H
+    W = cfg.ssm_conv_width
+    cd = jnp.dtype(cfg.compute_dtype)
+    Lr = cfg.n_layers
+    return {
+        "ssm": jnp.zeros((Lr, batch_size, H, hp, N), jnp.float32),
+        "conv_x": jnp.zeros((Lr, batch_size, W - 1, di), cd),
+        "conv_B": jnp.zeros((Lr, batch_size, W - 1, N), cd),
+        "conv_C": jnp.zeros((Lr, batch_size, W - 1, N), cd),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(params, batch, cfg: ModelConfig, *, max_len: int = None):
+    del max_len  # stateful cache — no KV to pad
+    logits, (h_fins, tails) = forward(params, batch, cfg, collect_cache=True)
+    cd = jnp.dtype(cfg.compute_dtype)
+    cx, cB, cC = tails
+    cache = {"ssm": h_fins, "conv_x": cx.astype(cd), "conv_B": cB.astype(cd),
+             "conv_C": cC.astype(cd),
+             "pos": jnp.asarray(batch["tokens"].shape[1], jnp.int32)}
+    return logits[:, -1, :], cache
+
+
+def decode_step(params, tokens, cache, cfg: ModelConfig):
+    cd = jnp.dtype(cfg.compute_dtype)
+    x = embed_tokens(params["embed"], tokens[:, None], cd)
+
+    def body(xc, lp_and_cache):
+        lp, h, cx, cB, cC = lp_and_cache
+        hin = L.norm(xc, lp["ln"], "rmsnorm")
+        out, h_new, (cxn, cBn, cCn) = mixer_step(hin, lp["mixer"], cfg, h,
+                                                 (cx, cB, cC))
+        return xc + out, (h_new, cxn.astype(cd), cBn.astype(cd),
+                          cCn.astype(cd))
+
+    x, (hs, cxs, cBs, cCs) = jax.lax.scan(
+        body, x, (params["layers"], cache["ssm"], cache["conv_x"],
+                  cache["conv_B"], cache["conv_C"]))
+    x = L.norm(x, params["ln_f"], "rmsnorm")
+    logits = lm_logits(params["embed"], x)[:, 0, :]
+    return logits, {"ssm": hs, "conv_x": cxs, "conv_B": cBs, "conv_C": cCs,
+                    "pos": cache["pos"] + 1}
+
+
+def build(cfg: ModelConfig) -> Model:
+    return Model(
+        cfg=cfg,
+        init=partial(init, cfg=cfg),
+        forward=partial(forward, cfg=cfg),
+        loss_fn=partial(loss_fn, cfg=cfg),
+        init_cache=partial(init_cache, cfg),
+        prefill=partial(prefill, cfg=cfg),
+        decode_step=partial(decode_step, cfg=cfg),
+    )

@@ -1,0 +1,256 @@
+"""Mixture-of-Experts decoder (olmoe-1b-7b, granite-moe-3b-a800m).
+
+GShard/Switch-style dense dispatch: top-k routing with capacity, one-hot
+dispatch/combine einsums (lowering-friendly, expert-parallel over the mesh
+``model`` axis when n_experts divides it). Router load-balance aux loss per
+Switch Transformer. The attention blocks are shared with the dense backbone.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.api import Model
+from repro.models.embed import embed_tokens, embedding_init, lm_logits
+from repro.models.transformer import _attn_block
+
+AUX_LOSS_COEF = 0.01
+CAPACITY_FACTOR = 1.25
+
+
+INFERENCE_CAPACITY_FACTOR = 1.5
+
+
+def _capacity(n_tokens: int, n_experts: int, top_k: int,
+              factor: float = CAPACITY_FACTOR) -> int:
+    c = int(n_tokens * top_k * factor / n_experts) + 1
+    return max(4, min(n_tokens, ((c + 15) // 16) * 16))
+
+
+def router_init(key, cfg: ModelConfig):
+    return {"w": L.dense_init(key, (cfg.d_model, cfg.n_experts))}
+
+
+def moe_ffn_init(key, cfg: ModelConfig):
+    k0, k1, k2, k3 = jax.random.split(key, 4)
+    E, d, f = cfg.n_experts, cfg.d_model, cfg.expert_d_ff
+    return {
+        "router": router_init(k0, cfg),
+        "w_gate": jax.vmap(lambda k: L.dense_init(k, (d, f)))(jax.random.split(k1, E)),
+        "w_up": jax.vmap(lambda k: L.dense_init(k, (d, f)))(jax.random.split(k2, E)),
+        "w_down": jax.vmap(lambda k: L.dense_init(k, (f, d), in_dim=f))(jax.random.split(k3, E)),
+    }
+
+
+def route(x_flat, p, cfg: ModelConfig, capacity: int = None):
+    """x_flat: (T, d). Returns combine (T,E,C) f32, dispatch (T,E,C) bool-ish,
+    aux load-balance loss (scalar f32)."""
+    T = x_flat.shape[0]
+    E, k = cfg.n_experts, cfg.top_k
+    C = capacity or _capacity(T, E, k)
+    logits = (x_flat.astype(jnp.float32) @ p["router"]["w"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)          # (T, E)
+    topv, topi = jax.lax.top_k(probs, k)             # (T, k)
+    topv = topv / jnp.maximum(jnp.sum(topv, -1, keepdims=True), 1e-9)
+
+    # Switch aux loss: E * sum_e f_e * P_e  (f = token fraction, P = mean prob)
+    sel_onehot = jax.nn.one_hot(topi, E, dtype=jnp.float32)        # (T,k,E)
+    frac = jnp.mean(jnp.sum(sel_onehot, axis=1), axis=0)            # (E,)
+    aux = E * jnp.sum(frac * jnp.mean(probs, axis=0)) / k
+
+    combine = jnp.zeros((T, E, C), jnp.float32)
+    # running per-expert fill count across the k slots
+    fill = jnp.zeros((E,), jnp.int32)
+    for slot in range(k):
+        e_idx = topi[:, slot]                                    # (T,)
+        oh = jax.nn.one_hot(e_idx, E, dtype=jnp.int32)           # (T,E)
+        pos = jnp.cumsum(oh, axis=0) - 1 + fill[None, :]         # (T,E) position in expert
+        fill = fill + jnp.sum(oh, axis=0)
+        pos_tok = jnp.sum(pos * oh, axis=1)                      # (T,) this slot's slot-index
+        keep = (pos_tok < C)
+        w = topv[:, slot] * keep.astype(jnp.float32)             # (T,)
+        cap_oh = jax.nn.one_hot(jnp.where(keep, pos_tok, 0), C, dtype=jnp.float32)
+        combine = combine + (w[:, None, None]
+                             * oh.astype(jnp.float32)[:, :, None]
+                             * cap_oh[:, None, :])
+    return combine, aux
+
+
+MOE_GROUP = 512  # GShard-style local routing groups
+
+
+def moe_ffn(x, p, cfg: ModelConfig, *, dropless: bool = False):
+    """x: (B, S, d) → (B, S, d), aux loss.
+
+    Tokens are routed within fixed-size *local groups* (GShard §3.2): the
+    dense one-hot dispatch/combine einsums are O(T·E·C) with C ∝ T/E, i.e.
+    quadratic in the routed group — routing the full global batch as one
+    group makes 32k-token prefills intractable (the dry-run flagged ~TB-scale
+    dispatch traffic before this change). Per-group capacity bounds the
+    dispatch tensors to (G, group, E, C≈group·k/E) — linear in T overall.
+
+    ``dropless=True`` (the inference path) sets capacity = group size so no
+    token is ever dropped — capacity dropping is a training-time load-balance
+    mechanism; serving must not silently drop tokens, and dropping would also
+    make decode inconsistent with teacher-forced scoring."""
+    B, S, d = x.shape
+    cd = x.dtype
+    T = B * S
+    group = min(MOE_GROUP, T)
+    pad = (-T) % group
+    xf = x.reshape(T, d)
+    if pad:
+        xf = jnp.concatenate([xf, jnp.zeros((pad, d), xf.dtype)], axis=0)
+    G = xf.shape[0] // group
+    xg = xf.reshape(G, group, d)
+    # Inference: generous capacity (cf=1.5) — fully-dropless (C=T) inflates
+    # the dispatch tensors E/k-fold, which the dry-run showed is 50 GiB/chip
+    # at 32k-token prefill. True dropless only when the batch is tiny
+    # (decode), where C=T is cheap and keeps decode == teacher-forced.
+    if dropless:
+        cap = group if group <= 128 else _capacity(
+            group, cfg.n_experts, cfg.top_k, INFERENCE_CAPACITY_FACTOR)
+    else:
+        cap = None
+    combine, aux = jax.vmap(lambda xr: route(xr, p, cfg, capacity=cap))(xg)
+    # HILLCLIMB(moe-dispatch-shard): keep dispatch/combine group-sharded over
+    # the batch axes and expert-sharded where E divides — without this, GSPMD
+    # replicated the (G,t,E,C) tensors at 32k-token prefill (50 GiB/chip
+    # observed in the dry-run memory analysis; ~3 GiB after).
+    combine = L.shard_hint(combine.astype(jnp.bfloat16),
+                           ("pod", "data"), None, "model", None)
+    dispatch = (combine > 0).astype(cd)                          # (G,t,E,C)
+    xe = jnp.einsum("gtec,gtd->gecd", dispatch, xg)              # (G,E,C,d)
+    xe = L.shard_hint(xe, ("pod", "data"), "model", None, None)
+    gate = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, p["w_gate"].astype(cd)))
+    up = jnp.einsum("gecd,edf->gecf", xe, p["w_up"].astype(cd))
+    h = jnp.einsum("gecf,efd->gecd", gate * up, p["w_down"].astype(cd))
+    h = L.shard_hint(h, ("pod", "data"), "model", None, None)
+    y = jnp.einsum("gtec,gecd->gtd", combine.astype(cd), h)
+    y = y.reshape(-1, d)
+    if pad:
+        y = y[:T]
+    return y.reshape(B, S, d), jnp.mean(aux)
+
+
+def _layer_init(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.norm_init(cfg.d_model, cfg.norm),
+        "attn": L.gqa_init(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim),
+        "ln2": L.norm_init(cfg.d_model, cfg.norm),
+        "moe": moe_ffn_init(k2, cfg),
+    }
+
+
+def init(key, cfg: ModelConfig):
+    ke, kl = jax.random.split(key)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    return {
+        "embed": embedding_init(ke, cfg),
+        "layers": jax.vmap(partial(_layer_init, cfg=cfg))(layer_keys),
+        "ln_f": L.norm_init(cfg.d_model, cfg.norm),
+    }
+
+
+def forward(params, batch, cfg: ModelConfig, *, remat: bool = False,
+            collect_cache: bool = False, with_aux: bool = False,
+            dropless: bool = False):
+    cd = jnp.dtype(cfg.compute_dtype)
+    x = embed_tokens(params["embed"], batch["tokens"], cd)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+
+    def body(carry, lp):
+        xc, aux_acc = carry
+        xc, kv = _attn_block(xc, lp, cfg, positions, window=cfg.attn_window)
+        h = L.norm(xc, lp["ln2"], cfg.norm)
+        y, aux = moe_ffn(h, lp["moe"], cfg, dropless=dropless)
+        return (xc + y, aux_acc + aux), kv if collect_cache else None
+
+    fn = jax.checkpoint(body) if remat else body
+    (x, aux_total), caches = jax.lax.scan(fn, (x, jnp.zeros((), jnp.float32)),
+                                          params["layers"])
+    x = L.norm(x, params["ln_f"], cfg.norm)
+    logits = lm_logits(params["embed"], x)
+    aux_total = aux_total / cfg.n_layers
+    if collect_cache:
+        return logits, caches, aux_total
+    return (logits, aux_total) if with_aux else logits
+
+
+def loss_fn(params, batch, cfg: ModelConfig, *, remat: bool = True):
+    logits, aux = forward(params, batch, cfg, remat=remat, with_aux=True)
+    nll = L.lm_loss(logits, batch["labels"], cfg.vocab, batch.get("mask"))
+    return nll + AUX_LOSS_COEF * aux
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int):
+    from repro.models.transformer import cache_len
+    shape = (cfg.n_layers, batch_size, cache_len(cfg, max_len),
+             cfg.n_kv_heads, cfg.head_dim)
+    cd = jnp.dtype(cfg.compute_dtype)
+    return {"k": jnp.zeros(shape, cd), "v": jnp.zeros(shape, cd),
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def prefill(params, batch, cfg: ModelConfig, *, max_len: int = None):
+    from repro.models.transformer import _fit_kv
+    logits, (ks, vs), _ = forward(params, batch, cfg, collect_cache=True,
+                                  dropless=True)
+    cache = {"k": _fit_kv(ks, cfg, max_len), "v": _fit_kv(vs, cfg, max_len),
+             "pos": jnp.asarray(batch["tokens"].shape[1], jnp.int32)}
+    return logits[:, -1, :], cache
+
+
+def decode_step(params, tokens, cache, cfg: ModelConfig):
+    cd = jnp.dtype(cfg.compute_dtype)
+    pos = cache["pos"]
+    x = embed_tokens(params["embed"], tokens[:, None], cd)
+    max_len = cache["k"].shape[2]
+    ring = cfg.attn_window > 0 and max_len <= cfg.attn_window
+    if ring:
+        kv_positions = L.ring_positions(pos, max_len)
+        write = jnp.mod(pos, max_len)
+    else:
+        kv_positions = jnp.arange(max_len, dtype=jnp.int32)
+        write = pos
+    q_positions = pos[None]
+
+    def body(xc, lp_and_cache):
+        lp, kc, vc = lp_and_cache
+        h = L.norm(xc, lp["ln1"], cfg.norm)
+        q, k, v = L.gqa_project(h, lp["attn"], cfg.n_heads, cfg.n_kv_heads,
+                                cfg.head_dim, q_positions, cfg.rope_theta)
+        kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype), (0, write, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype), (0, write, 0, 0))
+        a = L.attention(q, kc, vc, q_positions=q_positions,
+                        kv_positions=kv_positions, kv_len=pos + 1,
+                        causal=True, window=cfg.attn_window)
+        B = a.shape[0]
+        a = a.reshape(B, 1, cfg.n_heads * cfg.head_dim)
+        xc = xc + a @ lp["attn"]["wo"].astype(xc.dtype)
+        h2 = L.norm(xc, lp["ln2"], cfg.norm)
+        y, _ = moe_ffn(h2, lp["moe"], cfg, dropless=True)
+        return xc + y, (kc, vc)
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    x = L.norm(x, params["ln_f"], cfg.norm)
+    logits = lm_logits(params["embed"], x)[:, 0, :]
+    return logits, {"k": ks, "v": vs, "pos": pos + 1}
+
+
+def build(cfg: ModelConfig) -> Model:
+    return Model(
+        cfg=cfg,
+        init=partial(init, cfg=cfg),
+        forward=partial(forward, cfg=cfg),
+        loss_fn=partial(loss_fn, cfg=cfg),
+        init_cache=partial(init_cache, cfg),
+        prefill=partial(prefill, cfg=cfg),
+        decode_step=partial(decode_step, cfg=cfg),
+    )

@@ -1,0 +1,201 @@
+"""Dense decoder-only transformer (phi3-mini/medium, granite-3-2b, stablelm-12b)
+and the early-fusion VLM variant (chameleon-34b) which shares the backbone.
+
+Layers are stacked along a leading axis and executed with ``lax.scan`` so a
+48-layer model compiles one layer body; remat wraps the body for training.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.api import Model
+from repro.models.embed import embed_tokens, embedding_init, lm_logits
+
+
+def _layer_init(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.norm_init(cfg.d_model, cfg.norm),
+        "attn": L.gqa_init(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim),
+        "ln2": L.norm_init(cfg.d_model, cfg.norm),
+        "mlp": L.mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.act),
+    }
+
+
+def init(key, cfg: ModelConfig):
+    ke, kl, kf = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    return {
+        "embed": embedding_init(ke, cfg),
+        "layers": jax.vmap(partial(_layer_init, cfg=cfg))(layer_keys),
+        "ln_f": L.norm_init(cfg.d_model, cfg.norm),
+    }
+
+
+def _attn_block(x, lp, cfg: ModelConfig, positions, *, window: int):
+    h = L.norm(x, lp["ln1"], cfg.norm)
+    q, k, v = L.gqa_project(h, lp["attn"], cfg.n_heads, cfg.n_kv_heads,
+                            cfg.head_dim, positions, cfg.rope_theta)
+    a = L.attention(q, k, v, q_positions=positions, kv_positions=positions,
+                    causal=True, window=window)
+    B, S, _, _ = a.shape
+    a = a.reshape(B, S, cfg.n_heads * cfg.head_dim)
+    return x + a @ lp["attn"]["wo"].astype(x.dtype), (k, v)
+
+
+def _layer_fwd(x, lp, cfg: ModelConfig, positions, *, window: int):
+    x, kv = _attn_block(x, lp, cfg, positions, window=window)
+    h = L.norm(x, lp["ln2"], cfg.norm)
+    x = x + L.mlp(h, lp["mlp"], cfg.act)
+    return x, kv
+
+
+def _embed_batch(params, batch, cfg: ModelConfig):
+    """Early fusion: for the VLM, precomputed image-patch embeddings (the stub
+    frontend's output) replace the embeddings of the first n_image positions."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    x = embed_tokens(params["embed"], batch["tokens"], cd)
+    if "image_embeds" in batch:
+        img = batch["image_embeds"].astype(cd)
+        n_img = img.shape[1]
+        x = jnp.concatenate([img, x[:, n_img:, :]], axis=1)
+    return x
+
+
+def forward(params, batch, cfg: ModelConfig, *, remat: bool = False,
+            collect_cache: bool = False):
+    x = _embed_batch(params, batch, cfg)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+
+    def body(carry, lp):
+        y, kv = _layer_fwd(carry, lp, cfg, positions, window=cfg.attn_window)
+        return y, kv if collect_cache else None
+
+    fn = jax.checkpoint(body) if remat else body
+    x, caches = jax.lax.scan(fn, x, params["layers"])
+    x = L.norm(x, params["ln_f"], cfg.norm)
+    logits = lm_logits(params["embed"], x)
+    return (logits, caches) if collect_cache else logits
+
+
+def loss_fn(params, batch, cfg: ModelConfig, *, remat: bool = True):
+    logits = forward(params, batch, cfg, remat=remat)
+    return L.lm_loss(logits, batch["labels"], cfg.vocab, batch.get("mask"))
+
+
+def cache_len(cfg: ModelConfig, max_len: int) -> int:
+    """Window attention needs only a ring of attn_window slots."""
+    if cfg.attn_window > 0:
+        return min(max_len, cfg.attn_window)
+    return max_len
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int):
+    shape = (cfg.n_layers, batch_size, cache_len(cfg, max_len),
+             cfg.n_kv_heads, cfg.head_dim)
+    cd = jnp.dtype(cfg.compute_dtype)
+    return {
+        "k": jnp.zeros(shape, cd),
+        "v": jnp.zeros(shape, cd),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def _pad_kv(a, max_len):
+    S = a.shape[2]
+    if max_len is None or max_len <= S:
+        return a
+    return jnp.pad(a, ((0, 0), (0, 0), (0, max_len - S), (0, 0), (0, 0)))
+
+
+def _fit_kv(a, cfg: ModelConfig, max_len):
+    """Fit prefill KV into the decode cache: ring-pack for window attention,
+    zero-pad when the cache is longer than the prompt."""
+    if cfg.attn_window > 0:
+        alloc = cache_len(cfg, max(max_len or 0, a.shape[2]))
+        return _pad_kv(L.ring_pack(a, alloc), alloc)
+    return _pad_kv(a, max_len)
+
+
+def prefill(params, batch, cfg: ModelConfig, *, max_len: int = None):
+    logits, (ks, vs) = forward(params, batch, cfg, collect_cache=True)
+    cache = {"k": _fit_kv(ks, cfg, max_len), "v": _fit_kv(vs, cfg, max_len),
+             "pos": jnp.asarray(batch["tokens"].shape[1], jnp.int32)}
+    return logits[:, -1, :], cache
+
+
+def decode_step(params, tokens, cache, cfg: ModelConfig, *,
+                unroll: bool = True):
+    """One decode step. tokens: (B,) int32; cache from init_cache/prefill.
+
+    HILLCLIMB(decode-unroll): the layer loop is UNROLLED by default with
+    per-layer in-place cache updates. With a ``lax.scan`` over
+    (layer, cache-slice) the cache travels as scan xs AND ys, so XLA
+    double-buffers the full multi-GiB KV cache; unrolled, the donated cache
+    is updated in place (before/after in EXPERIMENTS.md §Perf)."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    pos = cache["pos"]
+    x = embed_tokens(params["embed"], tokens[:, None], cd)  # (B,1,d)
+    max_len = cache["k"].shape[2]
+    ring = cfg.attn_window > 0 and max_len <= cfg.attn_window
+    if ring:
+        kv_positions = L.ring_positions(pos, max_len)
+        write = jnp.mod(pos, max_len)
+    else:
+        kv_positions = jnp.arange(max_len, dtype=jnp.int32)
+        write = pos
+    q_positions = pos[None]
+
+    def body(xc, lp, kc, vc):
+        h = L.norm(xc, lp["ln1"], cfg.norm)
+        q, k, v = L.gqa_project(h, lp["attn"], cfg.n_heads, cfg.n_kv_heads,
+                                cfg.head_dim, q_positions, cfg.rope_theta)
+        kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype), (0, write, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype), (0, write, 0, 0))
+        a = L.attention(q, kc, vc, q_positions=q_positions,
+                        kv_positions=kv_positions, kv_len=pos + 1,
+                        causal=True, window=cfg.attn_window)
+        B = a.shape[0]
+        a = a.reshape(B, 1, cfg.n_heads * cfg.head_dim)
+        xc = xc + a @ lp["attn"]["wo"].astype(xc.dtype)
+        h2 = L.norm(xc, lp["ln2"], cfg.norm)
+        xc = xc + L.mlp(h2, lp["mlp"], cfg.act)
+        return xc, kc, vc
+
+    if unroll:
+        ks, vs = cache["k"], cache["v"]
+        for l in range(cfg.n_layers):
+            lp = jax.tree_util.tree_map(lambda a: a[l], params["layers"])
+            x, kl, vl = body(x, lp, ks[l], vs[l])
+            ks = jax.lax.dynamic_update_index_in_dim(ks, kl, l, 0)
+            vs = jax.lax.dynamic_update_index_in_dim(vs, vl, l, 0)
+    else:
+        def scan_body(carry, lp_and_cache):
+            lp, kc, vc = lp_and_cache
+            xc, kc, vc = body(carry, lp, kc, vc)
+            return xc, (kc, vc)
+
+        x, (ks, vs) = jax.lax.scan(
+            scan_body, x, (params["layers"], cache["k"], cache["v"]))
+    x = L.norm(x, params["ln_f"], cfg.norm)
+    logits = lm_logits(params["embed"], x)[:, 0, :]
+    new_cache = {"k": ks, "v": vs, "pos": pos + 1}
+    return logits, new_cache
+
+
+def build(cfg: ModelConfig) -> Model:
+    return Model(
+        cfg=cfg,
+        init=partial(init, cfg=cfg),
+        forward=partial(forward, cfg=cfg),
+        loss_fn=partial(loss_fn, cfg=cfg),
+        init_cache=partial(init_cache, cfg),
+        prefill=partial(prefill, cfg=cfg),
+        decode_step=partial(decode_step, cfg=cfg),
+    )

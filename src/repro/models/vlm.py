@@ -1,0 +1,27 @@
+"""Chameleon-style early-fusion VLM [arXiv:2405.09818] — chameleon-34b.
+
+Early fusion means the backbone is a plain dense decoder over a unified
+text+VQ-image-token vocabulary. The VQ-VAE image tokenizer is a STUB: the
+batch carries precomputed image-patch embeddings (B, n_image_tokens, d) that
+replace the embeddings of the leading positions (see
+``transformer._embed_batch``). Decode is identical to the dense path.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+from repro.models.api import Model
+
+
+def build(cfg: ModelConfig) -> Model:
+    return Model(
+        cfg=cfg,
+        init=partial(T.init, cfg=cfg),
+        forward=partial(T.forward, cfg=cfg),
+        loss_fn=partial(T.loss_fn, cfg=cfg),
+        init_cache=partial(T.init_cache, cfg),
+        prefill=partial(T.prefill, cfg=cfg),
+        decode_step=partial(T.decode_step, cfg=cfg),
+    )

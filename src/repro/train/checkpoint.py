@@ -1,0 +1,72 @@
+"""msgpack-based pytree checkpointing (no orbax in this environment).
+
+Format: {"meta": {...}, "tree": nested dict with leaves as
+{"__nd__": bytes, dtype, shape}}. Arrays round-trip exactly.
+"""
+from __future__ import annotations
+
+import pathlib
+from typing import Any, Dict, Tuple
+
+import jax
+import msgpack
+import numpy as np
+
+
+def _pack_leaf(x):
+    a = np.asarray(x)
+    return {b"__nd__": a.tobytes(), b"dtype": str(a.dtype).encode(),
+            b"shape": list(a.shape)}
+
+
+def _is_packed(d) -> bool:
+    return isinstance(d, dict) and b"__nd__" in d
+
+
+def _unpack_leaf(d):
+    return np.frombuffer(d[b"__nd__"],
+                         dtype=np.dtype(d[b"dtype"].decode())).reshape(
+        d[b"shape"]).copy()
+
+
+def _encode(tree):
+    if isinstance(tree, dict):
+        return {k: _encode(v) for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        return {"__seq__": [_encode(v) for v in tree],
+                "__tuple__": isinstance(tree, tuple)}
+    return _pack_leaf(tree)
+
+
+def _decode(obj):
+    if _is_packed(obj):
+        return _unpack_leaf(obj)
+    if isinstance(obj, dict):
+        if "__seq__" in obj or b"__seq__" in obj:
+            key = "__seq__" if "__seq__" in obj else b"__seq__"
+            tkey = "__tuple__" if "__tuple__" in obj else b"__tuple__"
+            seq = [_decode(v) for v in obj[key]]
+            return tuple(seq) if obj.get(tkey) else seq
+        return {(k.decode() if isinstance(k, bytes) else k): _decode(v)
+                for k, v in obj.items()}
+    return obj
+
+
+def save(path, params, meta: Dict[str, Any] = None) -> None:
+    path = pathlib.Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    host = jax.tree_util.tree_map(np.asarray, params)
+    blob = msgpack.packb({"meta": meta or {}, "tree": _encode(host)},
+                         use_bin_type=True)
+    tmp = path.with_suffix(".tmp")
+    tmp.write_bytes(blob)
+    tmp.rename(path)  # atomic publish
+
+
+def load(path) -> Tuple[Any, Dict[str, Any]]:
+    obj = msgpack.unpackb(pathlib.Path(path).read_bytes(), raw=True,
+                          strict_map_key=False)
+    meta = {k.decode() if isinstance(k, bytes) else k:
+            (v.decode() if isinstance(v, bytes) else v)
+            for k, v in obj[b"meta"].items()}
+    return _decode(obj[b"tree"]), meta

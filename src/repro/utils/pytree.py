@@ -1,0 +1,53 @@
+"""Pytree numeric helpers used across the DP machinery."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_global_norm(tree) -> jax.Array:
+    """Global L2 norm across every leaf of a pytree (f32 accumulate)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    sq = sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    return jnp.sqrt(sq)
+
+
+def tree_scale(tree, s):
+    return jax.tree_util.tree_map(lambda l: l * s.astype(l.dtype) if hasattr(s, "astype") else l * s, tree)
+
+
+def tree_add(a, b):
+    return jax.tree_util.tree_map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree_util.tree_map(jnp.subtract, a, b)
+
+
+def tree_zeros_like(tree, dtype=None):
+    return jax.tree_util.tree_map(
+        lambda l: jnp.zeros(l.shape, dtype or l.dtype), tree)
+
+
+def tree_size(tree) -> int:
+    return sum(l.size for l in jax.tree_util.tree_leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    return sum(l.size * l.dtype.itemsize for l in jax.tree_util.tree_leaves(tree))
+
+
+def tree_cast(tree, dtype):
+    return jax.tree_util.tree_map(lambda l: l.astype(dtype), tree)
+
+
+def tree_noise(key, tree, std):
+    """Gaussian noise pytree matching ``tree``'s shapes, always sampled in f32.
+
+    DP noise MUST be f32: at the paper's σ=3.2e-5 the perturbation is below
+    bf16 resolution near typical weight scales and would round away entirely.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    noised = [jax.random.normal(k, l.shape, jnp.float32) * std for k, l in zip(keys, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, noised)

@@ -1,0 +1,43 @@
+"""Adaptive clipping (beyond-paper, [TAM19]) converges S_t to the target
+quantile of the user-update-norm distribution."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.adaptive_clip import (adaptive_rounds, init_adaptive_clip,
+                                      update_clip_norm)
+
+
+def test_converges_to_quantile():
+    rng = np.random.default_rng(0)
+    # stationary norm distribution ~ lognormal, true 0.9-quantile known
+    norms = rng.lognormal(mean=0.0, sigma=0.5, size=(200, 100))
+    q90 = float(np.quantile(norms, 0.9))
+    state = init_adaptive_clip(initial_clip=0.05, target_quantile=0.9,
+                               lr=0.3, noise_multiplier_b=1.0)
+    state, traj = adaptive_rounds(list(norms), 100, jax.random.PRNGKey(0),
+                                  state)
+    tail = np.mean(traj[-30:])
+    assert abs(tail - q90) / q90 < 0.25, (tail, q90)
+    assert traj[0] < traj[-1]  # grew from the too-small start
+
+
+def test_tracks_shrinking_norms():
+    """As training converges, update norms shrink — S_t must follow down."""
+    rng = np.random.default_rng(1)
+    rounds = [rng.lognormal(0.0, 0.3, 50) * (1.0 - 0.004 * t)
+              for t in range(150)]
+    state = init_adaptive_clip(initial_clip=2.0, target_quantile=0.5,
+                               lr=0.3, noise_multiplier_b=1.0)
+    state, traj = adaptive_rounds(rounds, 50, jax.random.PRNGKey(1), state)
+    assert np.mean(traj[-10:]) < np.mean(traj[20:30])
+
+
+def test_noise_applied():
+    state = init_adaptive_clip(noise_multiplier_b=100.0)
+    outs = set()
+    for seed in range(5):
+        s2 = update_clip_norm(state, jnp.asarray(0.9), 100,
+                              jax.random.PRNGKey(seed))
+        outs.add(round(float(s2.clip_norm), 6))
+    assert len(outs) > 1  # DP noise on the fraction actually perturbs

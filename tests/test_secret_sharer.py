@@ -1,0 +1,82 @@
+"""Secret Sharer measurement framework: a model that memorized its canary
+must rank ~0 / be beam-extractable; a clean model must not."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.secret_sharer import (Canary, beam_search, canary_extracted,
+                                      log_perplexity, make_canaries,
+                                      random_sampling_rank)
+from repro.models import build
+
+VOCAB = 256
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = get_config("gboard-cifg-lstm").with_(vocab=VOCAB, d_model=32,
+                                               d_ff=64)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _memorize(model, params, canary, steps=300, lr=0.5):
+    toks = jnp.asarray(canary.tokens, jnp.int32)[None, :]
+    batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+    loss_g = jax.jit(jax.value_and_grad(model.loss_fn))
+    for _ in range(steps):
+        loss, g = loss_g(params, batch)
+        params = jax.tree_util.tree_map(lambda p, gr: p - lr * gr, params, g)
+    return params
+
+
+def test_make_canaries_grid():
+    cs = make_canaries(jax.random.PRNGKey(1), vocab=VOCAB)
+    assert len(cs) == 27
+    assert all(len(c.tokens) == 5 for c in cs)
+    assert all(0 <= t < VOCAB for c in cs for t in c.tokens)
+    assert sorted({(c.n_u, c.n_e) for c in cs}) == sorted(
+        [(1, 1), (1, 14), (1, 200), (4, 1), (4, 14), (4, 200),
+         (16, 1), (16, 14), (16, 200)])
+
+
+def test_log_perplexity_orders_memorized(tiny_model):
+    cfg, model, params = tiny_model
+    canary = Canary((5, 9, 13, 17, 21), 1, 1)
+    trained = _memorize(model, params, canary)
+    seq = np.asarray([canary.tokens], np.int32)
+    lp_before = log_perplexity(model, params, seq)[0]
+    lp_after = log_perplexity(model, trained, seq)[0]
+    assert lp_after < lp_before - 2.0
+
+
+def test_random_sampling_rank_separates(tiny_model):
+    cfg, model, params = tiny_model
+    canary = Canary((5, 9, 13, 17, 21), 1, 1)
+    trained = _memorize(model, params, canary)
+    key = jax.random.PRNGKey(3)
+    rank_clean = random_sampling_rank(model, params, canary, key,
+                                      n_samples=2000, batch_size=500)
+    rank_mem = random_sampling_rank(model, trained, canary, key,
+                                    n_samples=2000, batch_size=500)
+    assert rank_mem < 10
+    assert rank_clean > 100
+
+
+def test_beam_search_extracts_memorized(tiny_model):
+    cfg, model, params = tiny_model
+    canary = Canary((5, 9, 13, 17, 21), 1, 1)
+    trained = _memorize(model, params, canary)
+    assert canary_extracted(model, trained, canary)
+    assert not canary_extracted(model, params, canary)
+
+
+def test_beam_search_width(tiny_model):
+    cfg, model, params = tiny_model
+    tops = beam_search(model, params, (1, 2), total_len=5, width=5)
+    assert len(tops) == 5
+    assert all(len(t) == 5 for t in tops)
+    assert len(set(tops)) == 5

@@ -1,0 +1,102 @@
+"""End-to-end behaviour of the paper's system: DP-FedAvg training on a
+simulated device population improves held-out loss; the accountant tracks
+rounds; clipping statistics match the paper's qualitative Fig. 1 behaviour
+(small S ⇒ everyone clipped)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ClientConfig, DPConfig, get_config
+from repro.data.corpus import BigramCorpus
+from repro.data.federated import FederatedDataset, held_out_batch
+from repro.fl.round import FederatedTrainer
+from repro.models import build
+from repro.models.layers import lm_loss
+
+VOCAB = 1000
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("gboard-cifg-lstm").with_(vocab=VOCAB, d_model=48,
+                                               d_ff=96)
+    model = build(cfg)
+    corpus = BigramCorpus(vocab_size=VOCAB, seed=0)
+    ds = FederatedDataset(corpus, n_users=120, seq_len=16,
+                          sentences_per_user=25)
+    return cfg, model, corpus, ds
+
+
+def _held_out_loss(cfg, model, params, corpus):
+    hb = held_out_batch(corpus, 128, 16)
+    logits = model.forward(params, {"tokens": jnp.asarray(hb["tokens"])})
+    return float(lm_loss(logits, jnp.asarray(hb["labels"]), cfg.vocab,
+                         jnp.asarray(hb["mask"])))
+
+
+def test_dp_fedavg_end_to_end_improves(setup):
+    cfg, model, corpus, ds = setup
+    dp = DPConfig(clients_per_round=30, noise_multiplier=0.3, clip_norm=0.8,
+                  server_opt="momentum", server_lr=0.5, server_momentum=0.9)
+    cl = ClientConfig(local_epochs=1, batch_size=10, lr=0.3)
+    tr = FederatedTrainer(model, ds, dp, cl, n_local_batches=2, seed=0)
+    before = _held_out_loss(cfg, model, tr.state.params, corpus)
+    tr.train(25)
+    after = _held_out_loss(cfg, model, tr.state.params, corpus)
+    assert after < before - 1.0, (before, after)
+    assert tr.accountant.rounds == 25
+    eps = tr.accountant.get_epsilon(1e-5)
+    assert 0 < eps < 1e4
+
+
+def test_tiny_clip_norm_clips_everyone(setup):
+    """Fig. 1: below a certain S nearly all clients are clipped."""
+    cfg, model, corpus, ds = setup
+    dp = DPConfig(clients_per_round=20, noise_multiplier=0.0,
+                  clip_norm=0.001, server_lr=0.1)
+    cl = ClientConfig(local_epochs=1, batch_size=10, lr=0.3)
+    tr = FederatedTrainer(model, ds, dp, cl, n_local_batches=2, seed=1)
+    rec = tr.run_round()
+    assert rec["frac_clipped"] == 1.0
+
+
+def test_huge_clip_norm_clips_noone(setup):
+    cfg, model, corpus, ds = setup
+    dp = DPConfig(clients_per_round=20, noise_multiplier=0.0,
+                  clip_norm=1e6, server_lr=0.1)
+    cl = ClientConfig(local_epochs=1, batch_size=10, lr=0.3)
+    tr = FederatedTrainer(model, ds, dp, cl, n_local_batches=2, seed=1)
+    rec = tr.run_round()
+    assert rec["frac_clipped"] == 0.0
+
+
+def test_fixed_size_rounds(setup):
+    from repro.fl.population import PopulationSim
+    cfg, model, corpus, ds = setup
+    dp = DPConfig(clients_per_round=17, noise_multiplier=0.0, clip_norm=1.0)
+    cl = ClientConfig(local_epochs=1, batch_size=10, lr=0.3)
+    pop = PopulationSim(len(ds.users), availability=0.5, seed=2)
+    tr = FederatedTrainer(model, ds, dp, cl, pop=pop, n_local_batches=2,
+                          seed=2)
+    for _ in range(3):
+        rec = tr.run_round()
+        assert rec["n_clients"] == 17  # Algorithm 1: fixed-size rounds
+
+
+def test_noise_perturbs_but_preserves_scale(setup):
+    """Same data/seed, with vs without noise: params differ by ~σ-scale."""
+    cfg, model, corpus, ds = setup
+    cl = ClientConfig(local_epochs=1, batch_size=10, lr=0.3)
+    outs = {}
+    for z in (0.0, 1.0):
+        dp = DPConfig(clients_per_round=20, noise_multiplier=z,
+                      clip_norm=0.8, server_opt="sgd", server_lr=1.0)
+        tr = FederatedTrainer(model, ds, dp, cl, n_local_batches=2, seed=3)
+        tr.run_round()
+        outs[z] = tr.state.params
+    diffs = jax.tree_util.tree_map(lambda a, b: jnp.max(jnp.abs(a - b)),
+                                   outs[0.0], outs[1.0])
+    md = max(float(x) for x in jax.tree_util.tree_leaves(diffs))
+    sigma = 1.0 * 0.8 / 20
+    assert 0 < md < 10 * sigma
