@@ -41,7 +41,13 @@ def _recall_top1(cfg, model, params, corpus):
 
 
 def _train(cfg, model, corpus, ds, dp, cl, rounds=ROUNDS):
-    tr = FederatedTrainer(model, ds, dp, cl, n_local_batches=2, seed=0)
+    # compiled multi-round engine: the whole ablation grid shares its
+    # per-shape compile cache, so each sweep point pays jit once; ample
+    # availability so fixed-size rounds never outrun the check-in pool
+    from repro.fl.population import PopulationSim
+    pop = PopulationSim(len(ds.users), availability=0.5, seed=0)
+    tr = FederatedTrainer(model, ds, dp, cl, pop=pop, n_local_batches=2,
+                          seed=0, backend="engine", rounds_per_call=rounds)
     hist = tr.train(rounds)
     return tr, _recall_top1(cfg, model, tr.state.params, corpus), hist
 

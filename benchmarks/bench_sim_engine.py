@@ -1,0 +1,109 @@
+"""Simulation-engine throughput: compiled lax.scan engine vs host loop.
+
+Reports rounds/sec for the Python-loop `FederatedTrainer` (numpy sampling +
+host tensor stacking + one jit entry per round) against the compiled
+`SimEngine` (K rounds per jit call, device-resident population/data) at
+cohort sizes {50, 200, 1000} — the regime of the paper's secret-sharer
+sweeps and Table 6/7/8 ablations, where thousands of simulated rounds make
+driver throughput the binding constraint.
+
+Two host baselines are reported:
+
+* ``host`` — the driver as the repo's sweeps actually ran it: the
+  availability-gated check-in pool fluctuates below qN, so the stacked
+  client tensor changes shape and the round function *re-traces jit almost
+  every round*. This is the status quo the engine replaces (its fixed-size
+  on-device cohort makes every round the same program).
+* ``host_fixed_cohort`` — ample availability so the cohort is always
+  exactly qN: one compile, steady state; isolates the engine's win from
+  per-round dispatch/stacking/donation alone.
+
+    PYTHONPATH=src python benchmarks/bench_sim_engine.py [--dry-run]
+
+``--dry-run`` shrinks cohorts/rounds to a seconds-long CI smoke.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from benchmarks.common import emit
+from repro.configs import ClientConfig, DPConfig, get_config
+from repro.data.corpus import BigramCorpus
+from repro.data.federated import FederatedDataset
+from repro.fl.population import PopulationSim
+from repro.fl.round import FederatedTrainer
+from repro.models import build
+
+VOCAB = 300  # small NWP config: round *driver* overhead (stacking,
+D_MODEL = 24  # retracing, dispatch), not matmuls, should dominate —
+D_FF = 48     # that's what this bench isolates
+
+
+def _setup(n_users: int):
+    cfg = get_config("gboard-cifg-lstm").with_(vocab=VOCAB, d_model=D_MODEL,
+                                               d_ff=D_FF)
+    model = build(cfg)
+    corpus = BigramCorpus(vocab_size=VOCAB, seed=0)
+    ds = FederatedDataset(corpus, n_users=n_users, seq_len=16,
+                          sentences_per_user=20)
+    return cfg, model, ds
+
+
+def _rounds_per_sec(tr: FederatedTrainer, warmup: int, rounds: int) -> float:
+    tr.train(warmup)                      # compile + steady-state
+    t0 = time.perf_counter()
+    tr.train(rounds)
+    return rounds / (time.perf_counter() - t0)
+
+
+def run(dry_run: bool = False):
+    cohorts = [8] if dry_run else [50, 200, 1000]
+    host_rounds = 2 if dry_run else 5
+    eng_rounds = 4 if dry_run else 40
+    results = {}
+    for cohort in cohorts:
+        n_users = max(6 * cohort, 50)
+        cfg, model, ds = _setup(n_users)
+        dp = DPConfig(clients_per_round=cohort, noise_multiplier=0.3,
+                      clip_norm=0.8, server_opt="momentum", server_lr=0.5,
+                      server_momentum=0.9)
+        cl = ClientConfig(local_epochs=1, batch_size=10, lr=0.3)
+
+        # status quo: default availability (0.1) → the check-in pool dips
+        # below qN → cohort shape changes → re-trace nearly every round
+        host = FederatedTrainer(model, ds, dp, cl, n_local_batches=2,
+                                seed=0, backend="host")
+        host_rps = _rounds_per_sec(host, 1, host_rounds)
+        emit(f"sim_engine/host/cohort={cohort}", 1e6 / host_rps,
+             f"rounds_per_sec={host_rps:.3f}")
+
+        # steady-state host: cohort always exactly qN, single compile
+        pop = PopulationSim(n_users, availability=0.5, seed=0)
+        host_fix = FederatedTrainer(model, ds, dp, cl, pop=pop,
+                                    n_local_batches=2, seed=0,
+                                    backend="host")
+        fix_rps = _rounds_per_sec(host_fix, 1, host_rounds)
+        emit(f"sim_engine/host_fixed_cohort/cohort={cohort}", 1e6 / fix_rps,
+             f"rounds_per_sec={fix_rps:.3f}")
+
+        eng = FederatedTrainer(model, ds, dp, cl,
+                               pop=PopulationSim(n_users, availability=0.5,
+                                                 seed=0),
+                               n_local_batches=2, seed=0, backend="engine",
+                               rounds_per_call=min(20, eng_rounds))
+        eng_rps = _rounds_per_sec(eng, min(20, eng_rounds), eng_rounds)
+        speedup = eng_rps / host_rps
+        emit(f"sim_engine/compiled/cohort={cohort}", 1e6 / eng_rps,
+             f"rounds_per_sec={eng_rps:.3f};speedup_vs_host={speedup:.2f}x;"
+             f"speedup_vs_fixed_cohort_host={eng_rps / fix_rps:.2f}x")
+        results[cohort] = (host_rps, eng_rps, speedup)
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dry-run", action="store_true",
+                    help="tiny cohort/rounds smoke for CI")
+    args = ap.parse_args()
+    run(dry_run=args.dry_run)

@@ -7,6 +7,7 @@ Prints ``name,us_per_call,derived`` CSV lines. Tables covered:
   Table 5 → bench_accounting      (hypothetical (ε,δ) bounds)
   Tables 6/7/8 + Fig 1 → bench_ablations
   (ours)  → bench_kernels, roofline (§Roofline terms per arch × shape)
+  (ours)  → bench_sim_engine (compiled vs host-loop simulation throughput)
 """
 from __future__ import annotations
 
@@ -19,14 +20,16 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: accounting,recall,"
-                         "ablations,canary,secret_sharer,kernels,roofline")
+                         "ablations,canary,secret_sharer,kernels,roofline,"
+                         "sim_engine")
     ap.add_argument("--skip-slow", action="store_true",
                     help="skip the two multi-minute training benches")
     args = ap.parse_args()
 
     from benchmarks import (bench_accounting, bench_ablations,
                             bench_canary_exposure, bench_kernels,
-                            bench_recall, bench_secret_sharer, roofline)
+                            bench_recall, bench_secret_sharer,
+                            bench_sim_engine, roofline)
 
     benches = {
         "accounting": bench_accounting.run,
@@ -36,8 +39,9 @@ def main() -> None:
         "recall": bench_recall.run,
         "ablations": bench_ablations.run,
         "secret_sharer": bench_secret_sharer.run,
+        "sim_engine": bench_sim_engine.run,
     }
-    slow = {"recall", "ablations", "secret_sharer"}
+    slow = {"recall", "ablations", "secret_sharer", "sim_engine"}
     selected = (args.only.split(",") if args.only else list(benches))
 
     print("name,us_per_call,derived")

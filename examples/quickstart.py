@@ -11,6 +11,7 @@ from repro.configs import ClientConfig, DPConfig, get_config
 from repro.data.corpus import BigramCorpus
 from repro.data.federated import FederatedDataset, held_out_batch
 from repro.data.tokenizer import BOS
+from repro.fl.population import PopulationSim
 from repro.fl.round import FederatedTrainer
 from repro.launch.serve import generate
 from repro.models import build
@@ -27,13 +28,18 @@ corpus = BigramCorpus(vocab_size=VOCAB, seed=0)
 dataset = FederatedDataset(corpus, n_users=300, seq_len=16,
                            sentences_per_user=30)
 
-# 3. DP-FedAvg, Algorithm 1: clip S=0.8, fixed-size rounds, server momentum
+# 3. DP-FedAvg, Algorithm 1: clip S=0.8, fixed-size rounds, server momentum.
+#    backend="engine" runs the whole simulation on device, 15 rounds per jit
+#    call (see repro/fl/engine.py); backend="host" is the reference loop.
 dp = DPConfig(clients_per_round=40, noise_multiplier=0.3, clip_norm=0.8,
               server_opt="momentum", server_lr=0.5, server_momentum=0.9)
 client = ClientConfig(local_epochs=1, batch_size=10, lr=0.3)
 
-trainer = FederatedTrainer(model, dataset, dp, client, n_local_batches=3)
-print("training 60 DP-FedAvg rounds ...")
+pop = PopulationSim(len(dataset.users), availability=0.3, seed=0)
+trainer = FederatedTrainer(model, dataset, dp, client, pop=pop,
+                           n_local_batches=3, backend="engine",
+                           rounds_per_call=15)
+print("training 60 DP-FedAvg rounds (compiled engine) ...")
 trainer.train(60, log_every=15)
 
 # 4. held-out quality + the moments accountant

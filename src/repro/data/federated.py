@@ -105,6 +105,32 @@ class FederatedDataset:
             batches.append(examples_to_batch(chunk))
         return batches
 
+    def to_device_arrays(self, max_examples: Optional[int] = None
+                         ) -> Dict[str, np.ndarray]:
+        """Pack the whole population into fixed-shape arrays for the compiled
+        simulation engine (`repro.fl.engine`):
+
+        * ``examples`` — (n_users, E_max, seq_len+1) int32. Users with fewer
+          than E_max examples are padded by *tiling* their real examples, so
+          every slot holds a valid example regardless of the index used.
+        * ``counts`` — (n_users,) int32 true example counts (the engine draws
+          uniform indices in [0, counts[u]) so tiled padding never skews the
+          per-example distribution).
+        * ``synthetic`` — (n_users,) bool secret-sharer mask (always
+          available, exempt from Pace Steering).
+        """
+        n = len(self.users)
+        emax = max_examples or max(u.examples.shape[0] for u in self.users)
+        ex = np.zeros((n, emax, self.seq_len + 1), np.int32)
+        counts = np.zeros((n,), np.int32)
+        synth = np.zeros((n,), bool)
+        for i, u in enumerate(self.users):
+            c = min(u.examples.shape[0], emax)
+            ex[i] = u.examples[np.resize(np.arange(c), emax)]
+            counts[i] = c
+            synth[i] = u.is_synthetic
+        return {"examples": ex, "counts": counts, "synthetic": synth}
+
     def user_tensor(self, user_id: int, batch_size: int, n_batches: int,
                     rng: np.random.Generator) -> Dict[str, np.ndarray]:
         """Fixed-shape (n_batches, B, S) stack for the vmapped/jit round path;

@@ -50,17 +50,27 @@ def user_update(model: Model, params0, batches, client: ClientConfig,
     return clipped, norm, was_clipped, loss
 
 
+def round_compute(model: Model, params, stacked_batches,
+                  client: ClientConfig, dp: DPConfig):
+    """Pure round body: (params, stacked client batches (C, nb, B, S)) →
+    (sum of clipped updates, mean norm, frac clipped, mean loss).
+
+    Traceable — the simulation engine inlines this into its scan body;
+    :func:`make_round_fn` wraps it in jit for the per-round host loop.
+    """
+    def one(batches):
+        return user_update(model, params, batches, client, dp)
+
+    clipped, norms, flags, losses = jax.vmap(one)(stacked_batches)
+    total = jax.tree_util.tree_map(lambda l: jnp.sum(l, axis=0), clipped)
+    return total, jnp.mean(norms), jnp.mean(flags), jnp.mean(losses)
+
+
 def make_round_fn(model: Model, client: ClientConfig, dp: DPConfig):
-    """jit-able: (params, stacked client batches (C, nb, B, S)) →
-    (sum of clipped updates, mean norm, frac clipped, mean loss)."""
+    """jit-compiled :func:`round_compute` for the host-loop trainer."""
 
     @partial(jax.jit, static_argnums=())
     def round_fn(params, stacked_batches):
-        def one(batches):
-            return user_update(model, params, batches, client, dp)
-
-        clipped, norms, flags, losses = jax.vmap(one)(stacked_batches)
-        total = jax.tree_util.tree_map(lambda l: jnp.sum(l, axis=0), clipped)
-        return total, jnp.mean(norms), jnp.mean(flags), jnp.mean(losses)
+        return round_compute(model, params, stacked_batches, client, dp)
 
     return round_fn

@@ -1,0 +1,228 @@
+"""Compiled multi-round DP-FedAvg simulation engine.
+
+The host-loop trainer (`repro.fl.round.FederatedTrainer`, backend="host")
+re-stacks client tensors with numpy and re-enters jit every round; at
+thousands of simulated rounds (secret-sharer sweeps, Table 5/6/7/8
+ablations) that host round-trip dominates wall clock. This engine keeps the
+*entire* simulation on device and runs K federated rounds per jit call with
+a single ``lax.scan``:
+
+* **population** — per-round availability draws + Pace Steering weights
+  computed on device from a ``last_round`` vector (the weight function is a
+  hook, see :func:`pace_steering_weights`);
+* **sampling** — fixed-size weighted sampling without replacement via
+  ``jax.random.choice`` (Gumbel top-k under the hood, matching numpy's
+  successive-draw semantics; zero-weight devices are never selected while
+  ≥ cohort positive-weight devices exist);
+* **data** — gather-based client batching from the padded device-resident
+  corpus tensor built by ``FederatedDataset.to_device_arrays()``; no host
+  data movement after engine construction;
+* **round** — the clip → sum → noise → server-optimizer (Nesterov) step of
+  Algorithm 1 fused into the scan body (`repro.fl.client.round_compute` +
+  `repro.core.dp_fedavg.finalize_round`), with state buffers donated across
+  calls.
+
+`run` (compiled scan) and `run_python` (per-round jit, Python loop) execute
+the *same* traced round body from the same PRNG stream, so they sample
+identical cohorts and are numerically interchangeable — `tests/test_engine.py`
+asserts trajectory parity and zero-noise bit-exactness.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ClientConfig, DPConfig
+from repro.core.dp_fedavg import finalize_round, server_step
+from repro.core.server_optim import ServerOptState, init_state
+from repro.data.tokenizer import PAD
+from repro.fl.client import round_compute
+from repro.models.api import Model
+
+
+class EngineState(NamedTuple):
+    """Device-resident simulation state threaded through the round scan."""
+
+    params: Any
+    opt_state: ServerOptState
+    key: jax.Array            # PRNG stream (split once per round)
+    last_round: jax.Array     # (N,) int32 — last participation, Pace Steering
+    participation: jax.Array  # (N,) int32 — per-device participation counts
+    round_idx: jax.Array      # () int32
+
+
+def pace_steering_weights(last_round, synthetic, round_idx,
+                          cooldown: int, penalty: float):
+    """Default weight hook — mirrors `PopulationSim.selection_weights`:
+    devices that participated within ``cooldown`` rounds are deprioritized to
+    ``penalty``; secret-sharer synthetic devices are exempt (paper §V-A)."""
+    cooling = (round_idx - last_round) < cooldown
+    cooling &= ~synthetic
+    return jnp.where(cooling, penalty, 1.0)
+
+
+# Stand-in weight for unavailable devices: log(1e-30) ≈ -69 is far below any
+# Gumbel perturbation of a real weight, so they are never chosen while ≥
+# cohort available devices exist — but rounds stay fixed-size (and p stays
+# finite) when an availability draw comes up short.
+_UNAVAILABLE_W = 1e-30
+
+
+def sample_cohort(key, weights, available, cohort: int):
+    """Fixed-size weighted sampling without replacement on device.
+
+    Rounds are fixed-size by construction (Algorithm 1): if a round's
+    check-in draw leaves fewer than ``cohort`` devices, the remainder is
+    topped up from un-checked-in devices rather than shrinking the round
+    (the host loop does the opposite — see ``SimEngine`` for the warning
+    when a configuration makes that regime likely)."""
+    w = jnp.where(available, weights, _UNAVAILABLE_W).astype(jnp.float32)
+    p = w / jnp.sum(w)
+    return jax.random.choice(key, w.shape[0], (cohort,), replace=False, p=p)
+
+
+def gather_client_batches(examples, counts, ids, key,
+                          n_batches: int, batch_size: int):
+    """Build the (C, n_batches, B, S) client batch stack by pure gathers from
+    the padded corpus tensor — the device-side analogue of
+    ``FederatedDataset.user_tensor`` (uniform-per-example via per-user
+    ``counts`` bounds; draws with replacement)."""
+    C = ids.shape[0]
+    need = n_batches * batch_size
+    idx = jax.random.randint(key, (C, need), 0, counts[ids][:, None])
+    emax = examples.shape[1]
+    flat = examples.reshape((-1, examples.shape[-1]))
+    rows = flat[ids[:, None] * emax + idx]              # (C, need, S+1)
+    rows = rows.reshape(C, n_batches, batch_size, -1)
+    batch = {"tokens": rows[..., :-1], "labels": rows[..., 1:]}
+    batch["mask"] = (batch["labels"] != PAD).astype(jnp.float32)
+    return batch
+
+
+class SimEngine:
+    """K-rounds-per-jit DP-FedAvg simulator over a device-resident population.
+
+    ``data`` is the dict from ``FederatedDataset.to_device_arrays()``. The
+    availability / Pace-Steering parameters mirror ``PopulationSim``; pass
+    ``weight_fn(last_round, synthetic, round_idx) -> (N,) weights`` to
+    replace the Pace-Steering prior (e.g. for sampling-skew ablations).
+    """
+
+    def __init__(self, model: Model, data: Dict[str, np.ndarray],
+                 dp: DPConfig, client: ClientConfig, *,
+                 n_local_batches: int = 4, availability: float = 0.1,
+                 pace_cooldown: int = 50, pace_penalty: float = 0.01,
+                 rounds_per_call: int = 8,
+                 weight_fn: Optional[Callable] = None):
+        self.model = model
+        self.dp = dp
+        self.client = client
+        self.n_local_batches = n_local_batches
+        self.availability = availability
+        self.rounds_per_call = max(int(rounds_per_call), 1)
+        self.examples = jnp.asarray(data["examples"])
+        self.counts = jnp.asarray(data["counts"])
+        self.synthetic = jnp.asarray(data["synthetic"])
+        self.n_users = int(self.examples.shape[0])
+        self.cohort = min(dp.clients_per_round, self.n_users)
+        n_synth = int(np.asarray(data["synthetic"]).sum())
+        expected_avail = availability * (self.n_users - n_synth) + n_synth
+        if expected_avail < self.cohort:
+            import warnings
+            warnings.warn(
+                f"SimEngine: expected check-ins ({expected_avail:.0f} = "
+                f"{availability}·{self.n_users - n_synth} real + {n_synth} "
+                f"synthetic) < cohort ({self.cohort}); fixed-size rounds "
+                "will regularly be topped up from un-checked-in devices and "
+                "σ = zS/qN assumes the full cohort. Raise availability / "
+                "population or lower clients_per_round.", stacklevel=2)
+        self.weight_fn = weight_fn or (
+            lambda last, synth, r: pace_steering_weights(
+                last, synth, r, pace_cooldown, pace_penalty))
+        self._compiled: Dict[int, Callable] = {}
+        # reference path keeps its inputs alive (no donation) so tests can
+        # replay the same initial state through both entry points
+        self._one_round = jax.jit(self._round_body)
+
+    # ------------------------------------------------------------------ state
+
+    def init_state(self, params, seed: int = 0,
+                   opt_state: Optional[ServerOptState] = None) -> EngineState:
+        return EngineState(
+            params=params,
+            opt_state=opt_state if opt_state is not None else init_state(params),
+            key=jax.random.PRNGKey(seed),
+            last_round=jnp.full((self.n_users,), -(10 ** 9), jnp.int32),
+            participation=jnp.zeros((self.n_users,), jnp.int32),
+            round_idx=jnp.zeros((), jnp.int32))
+
+    # ------------------------------------------------------------- round body
+
+    def _round_body(self, state: EngineState, _=None
+                    ) -> Tuple[EngineState, Dict[str, jax.Array]]:
+        key, k_avail, k_sample, k_idx, k_noise = jax.random.split(state.key, 5)
+        avail = (jax.random.uniform(k_avail, (self.n_users,))
+                 < self.availability) | self.synthetic
+        w = self.weight_fn(state.last_round, self.synthetic, state.round_idx)
+        ids = sample_cohort(k_sample, w, avail, self.cohort)
+        batches = gather_client_batches(self.examples, self.counts, ids,
+                                        k_idx, self.n_local_batches,
+                                        self.client.batch_size)
+        total, mean_norm, frac_clipped, loss = round_compute(
+            self.model, state.params, batches, self.client, self.dp)
+        delta, stats = finalize_round(total, self.cohort, k_noise, self.dp,
+                                      stats=(mean_norm, frac_clipped))
+        params, opt_state = server_step(state.params, state.opt_state, delta,
+                                        self.dp)
+        new_state = EngineState(
+            params, opt_state, key,
+            state.last_round.at[ids].set(state.round_idx),
+            state.participation.at[ids].add(1),
+            state.round_idx + 1)
+        rec = {"loss": loss, "mean_update_norm": mean_norm,
+               "frac_clipped": frac_clipped, "noise_std": stats.noise_std}
+        return new_state, rec
+
+    def _run_k(self, k: int) -> Callable:
+        """jit of a k-round scan with state-buffer donation (params/opt/
+        population vectors are updated in place across chunk calls)."""
+        if k not in self._compiled:
+            def run(state):
+                return jax.lax.scan(self._round_body, state, None, length=k)
+            self._compiled[k] = jax.jit(run, donate_argnums=0)
+        return self._compiled[k]
+
+    # ------------------------------------------------------------------ entry
+
+    def run(self, state: EngineState, n_rounds: int
+            ) -> Tuple[EngineState, Dict[str, np.ndarray]]:
+        """Compiled path: scan ``rounds_per_call`` rounds per jit call.
+        Returns (state, history dict of (n_rounds,) numpy arrays)."""
+        if n_rounds <= 0:
+            return state, {}
+        hists = []
+        left = n_rounds
+        while left > 0:
+            k = min(self.rounds_per_call, left)
+            state, h = self._run_k(k)(state)
+            hists.append(jax.device_get(h))
+            left -= k
+        hist = {k: np.concatenate([h[k] for h in hists]) for k in hists[0]}
+        return state, hist
+
+    def run_python(self, state: EngineState, n_rounds: int
+                   ) -> Tuple[EngineState, Dict[str, np.ndarray]]:
+        """Reference path: the same round body, one jit entry per round.
+        Consumes the identical PRNG stream as :meth:`run`, so cohorts,
+        batches, and noise match round for round."""
+        if n_rounds <= 0:
+            return state, {}
+        recs = []
+        for _ in range(n_rounds):
+            state, rec = self._one_round(state)
+            recs.append(jax.device_get(rec))
+        hist = {k: np.asarray([r[k] for r in recs]) for k in recs[0]}
+        return state, hist

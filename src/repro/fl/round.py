@@ -1,7 +1,16 @@
 """Federated round orchestration: sample → local train → Algorithm 1 server.
 
-This is the *simulation* driver (CPU-scale, real data movement); the
-production-shape distributed round is `repro.launch.steps.fed_train_step`.
+This is the *simulation* driver (CPU-scale); the production-shape
+distributed round is `repro.launch.steps.fed_train_step`. Three backends:
+
+* ``"engine"`` (default for multi-round work) — the compiled multi-round
+  engine (`repro.fl.engine.SimEngine`): population, sampling, client
+  batching and the server step all live on device; K rounds per jit call.
+* ``"engine_python"`` — the engine's per-round-jit reference loop (same
+  PRNG stream → identical trajectories; used by parity tests).
+* ``"host"`` — the original numpy-sampling, host-stacking loop. Kept as the
+  independent reference implementation exercising `PopulationSim` /
+  `fl.sampling` and real host data movement.
 """
 from __future__ import annotations
 
@@ -18,9 +27,12 @@ from repro.core.dp_fedavg import finalize_round, server_step
 from repro.core.server_optim import ServerOptState, init_state
 from repro.data.federated import FederatedDataset
 from repro.fl.client import make_round_fn
+from repro.fl.engine import SimEngine
 from repro.fl.population import PopulationSim
 from repro.fl.sampling import sample_round
 from repro.models.api import Model
+
+BACKENDS = ("host", "engine", "engine_python")
 
 
 @dataclass
@@ -37,24 +49,55 @@ class FederatedTrainer:
     def __init__(self, model: Model, dataset: FederatedDataset,
                  dp: DPConfig, client: ClientConfig,
                  pop: Optional[PopulationSim] = None, seed: int = 0,
-                 n_local_batches: int = 4):
+                 n_local_batches: int = 4, backend: str = "host",
+                 rounds_per_call: int = 8):
+        if backend not in BACKENDS:
+            raise ValueError(f"backend must be one of {BACKENDS}, "
+                             f"got {backend!r}")
         self.model = model
         self.dataset = dataset
         self.dp = dp
         self.client = client
         self.n_local_batches = n_local_batches
+        self.backend = backend
         synth = [u.user_id for u in dataset.users if u.is_synthetic]
         self.pop = pop or PopulationSim(len(dataset.users),
                                         synthetic_ids=synth, seed=seed)
         self.rng = np.random.default_rng(seed)
         self.key = jax.random.PRNGKey(seed)
-        self._round_fn = make_round_fn(model, client, dp)
         self.accountant = acct.MomentsAccountant(
             q=dp.clients_per_round / max(len(dataset.users), 1),
             noise_multiplier=dp.noise_multiplier, sampling="wor")
         params = model.init(jax.random.PRNGKey(seed + 1))
         self.state = TrainerState(params, init_state(params))
         self.participation = np.zeros(len(dataset.users), np.int64)
+
+        if backend == "host":
+            self._round_fn = make_round_fn(model, client, dp)
+            self.engine = None
+            self._estate = None
+        else:
+            # scalar population dynamics come from the PopulationSim config;
+            # the synthetic-device mask comes from the dataset itself (the
+            # engine's RNG stream is the trainer seed, not pop.seed — round
+            # draws live on device)
+            if sorted(self.pop.synthetic_ids) != synth:
+                raise ValueError(
+                    "engine backends take the synthetic-device mask from "
+                    f"the dataset ({synth}), but the PopulationSim was "
+                    f"built with synthetic_ids={list(self.pop.synthetic_ids)}"
+                    " — make them agree (or omit synthetic_ids)")
+            self.engine = SimEngine(
+                model, dataset.to_device_arrays(), dp, client,
+                n_local_batches=n_local_batches,
+                availability=self.pop.availability,
+                pace_cooldown=self.pop.pace_cooldown,
+                pace_penalty=self.pop.pace_penalty,
+                rounds_per_call=rounds_per_call)
+            self._estate = self.engine.init_state(
+                params, seed=seed, opt_state=self.state.opt_state)
+
+    # ------------------------------------------------------------- host path
 
     def _stack_clients(self, ids: np.ndarray):
         tensors = [self.dataset.user_tensor(int(u), self.client.batch_size,
@@ -63,7 +106,7 @@ class FederatedTrainer:
         return {k: jnp.asarray(np.stack([t[k] for t in tensors]))
                 for k in tensors[0]}
 
-    def run_round(self) -> Dict:
+    def _run_round_host(self) -> Dict:
         s = self.state
         ids = sample_round(self.pop, self.rng, s.round_idx,
                            self.dp.clients_per_round)
@@ -85,11 +128,59 @@ class FederatedTrainer:
         s.history.append(rec)
         return rec
 
+    # ----------------------------------------------------------- engine path
+
+    def _train_engine(self, rounds: int, log_every: int = 0) -> List[Dict]:
+        s = self.state
+        runner = (self.engine.run if self.backend == "engine"
+                  else self.engine.run_python)
+        recs = []
+        done = 0
+        while done < rounds:
+            # chunk by log_every so progress lines appear while training
+            k = min(log_every or rounds, rounds - done)
+            self._estate, hist = runner(self._estate, k)
+            for i in range(k):
+                s.round_idx += 1
+                rec = {"round": s.round_idx, "loss": float(hist["loss"][i]),
+                       "mean_update_norm":
+                           float(hist["mean_update_norm"][i]),
+                       "frac_clipped": float(hist["frac_clipped"][i]),
+                       "n_clients": int(self.engine.cohort),
+                       "noise_std": float(hist["noise_std"][i])}
+                s.history.append(rec)
+                recs.append(rec)
+                if log_every and rec["round"] % log_every == 0:
+                    self._log(rec)
+            done += k
+        s.params = self._estate.params
+        s.opt_state = self._estate.opt_state
+        self.accountant.step(rounds)
+        # mirror device population state back into the host PopulationSim so
+        # post-hoc analyses (participation, Pace-Steering recency) see it
+        self.participation = np.asarray(self._estate.participation, np.int64)
+        self.pop._last_round = np.asarray(self._estate.last_round, np.int64)
+        return recs
+
+    # ---------------------------------------------------------------- public
+
+    def run_round(self) -> Dict:
+        if self.backend == "host":
+            return self._run_round_host()
+        return self._train_engine(1)[-1]
+
     def train(self, rounds: int, log_every: int = 0) -> List[Dict]:
+        if self.backend != "host":
+            self._train_engine(rounds, log_every)
+            return self.state.history
         for r in range(rounds):
-            rec = self.run_round()
+            rec = self._run_round_host()
             if log_every and (r + 1) % log_every == 0:
-                print(f"round {rec['round']:4d}  loss {rec['loss']:.4f}  "
-                      f"clipped {rec['frac_clipped']:.2f}  "
-                      f"norm {rec['mean_update_norm']:.3f}")
+                self._log(rec)
         return self.state.history
+
+    @staticmethod
+    def _log(rec: Dict) -> None:
+        print(f"round {rec['round']:4d}  loss {rec['loss']:.4f}  "
+              f"clipped {rec['frac_clipped']:.2f}  "
+              f"norm {rec['mean_update_norm']:.3f}")

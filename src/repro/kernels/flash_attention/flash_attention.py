@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.utils.compat import tpu_compiler_params
+
 BLOCK_Q = 128
 BLOCK_K = 128
 NEG_INF = -1e30
@@ -98,7 +100,7 @@ def flash_attention_bhsd(q, k, v, *, causal: bool = True, window: int = 0,
             pltpu.VMEM((BLOCK_Q, 128), jnp.float32),
             pltpu.VMEM((BLOCK_Q, hd), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,

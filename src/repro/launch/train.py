@@ -46,6 +46,15 @@ def main():
     ap.add_argument("--seq-len", type=int, default=16)
     ap.add_argument("--out", default="experiments/runs")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--backend", default="engine",
+                    choices=["engine", "engine_python", "host"],
+                    help="engine = compiled multi-round simulator "
+                         "(repro.fl.engine); host = numpy reference loop")
+    ap.add_argument("--rounds-per-call", type=int, default=10,
+                    help="rounds fused per jit call (engine backend)")
+    ap.add_argument("--availability", type=float, default=0.3,
+                    help="per-round device check-in probability; keep "
+                         "availability·n_users above clients_per_round")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -72,8 +81,13 @@ def main():
                   server_momentum=args.server_momentum)
     cl = ClientConfig(local_epochs=args.local_epochs,
                       batch_size=args.client_batch, lr=args.client_lr)
-    trainer = FederatedTrainer(model, ds, dp, cl, seed=args.seed,
-                               n_local_batches=3)
+    from repro.fl.population import PopulationSim
+    pop = PopulationSim(len(ds.users), availability=args.availability,
+                        synthetic_ids=[u.user_id for u in ds.users
+                                       if u.is_synthetic], seed=args.seed)
+    trainer = FederatedTrainer(model, ds, dp, cl, pop=pop, seed=args.seed,
+                               n_local_batches=3, backend=args.backend,
+                               rounds_per_call=args.rounds_per_call)
     trainer.train(args.rounds, log_every=max(1, args.rounds // 20))
 
     eps = trainer.accountant.get_epsilon(1e-6)

@@ -1,0 +1,55 @@
+"""JAX version compatibility shims.
+
+The repo targets the current JAX API (``jax.set_mesh``,
+``jax.sharding.get_abstract_mesh``, ``pltpu.CompilerParams``) but must also
+run on the 0.4.x line baked into the CI image, where those names don't exist
+yet. Every call site goes through this module so the version split lives in
+exactly one place.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def set_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh.
+
+    New JAX: ``jax.set_mesh(mesh)``. Old JAX: a concrete ``Mesh`` is itself a
+    context manager that sets ``thread_resources.env.physical_mesh``, which is
+    what lets ``with_sharding_constraint`` accept bare ``PartitionSpec``s.
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
+def get_abstract_mesh():
+    """Ambient ``AbstractMesh`` or ``None`` when no mesh is in scope.
+
+    Normalizes the two APIs: new JAX returns an (possibly ``empty``)
+    ``AbstractMesh`` from ``jax.sharding.get_abstract_mesh``; on 0.4.x we
+    read the legacy thread-local physical mesh installed by ``with mesh:``.
+    """
+    fn = getattr(jax.sharding, "get_abstract_mesh", None)
+    if fn is not None:
+        mesh = fn()
+        # 0.4.x exposes a same-named internal helper returning a tuple.
+        if mesh is None or isinstance(mesh, tuple):
+            mesh = None
+        if mesh is not None:
+            return mesh
+    try:
+        from jax._src import mesh as _mesh_lib
+        physical = _mesh_lib.thread_resources.env.physical_mesh
+        if physical is not None and not physical.empty:
+            return physical.abstract_mesh
+    except Exception:
+        pass
+    return None
+
+
+def tpu_compiler_params(**kwargs):
+    """``pltpu.CompilerParams`` (new name) / ``pltpu.TPUCompilerParams`` (old)."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(**kwargs)

@@ -70,6 +70,26 @@ def test_user_tensor_shapes(corpus):
     assert (t["labels"][t["mask"] > 0] != PAD).all()
 
 
+def test_to_device_arrays_packing(corpus):
+    """Engine packing: shapes, true counts, tiled padding holds only real
+    examples, synthetic mask mirrors the shards."""
+    ds = FederatedDataset(corpus, n_users=6, seq_len=16,
+                          sentences_per_user=5)
+    ds.inject_canaries(make_canaries(jax.random.PRNGKey(0),
+                                     vocab=VOCAB)[:1])
+    data = ds.to_device_arrays()
+    n, emax = data["examples"].shape[:2]
+    assert n == len(ds.users)
+    assert emax == max(u.examples.shape[0] for u in ds.users)
+    assert data["examples"].shape[2] == 17
+    for i, u in enumerate(ds.users):
+        assert data["counts"][i] == u.examples.shape[0]
+        assert data["synthetic"][i] == u.is_synthetic
+        # every padded slot tiles a real example of the same user
+        real = {tuple(r) for r in u.examples}
+        assert all(tuple(r) in real for r in data["examples"][i])
+
+
 def test_ngram_beats_unigram(corpus):
     train = corpus.sample_sentences(3000, seed=2)
     test = corpus.sample_sentences(300, seed=3)

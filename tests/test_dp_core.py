@@ -1,10 +1,13 @@
-"""Unit + property tests for the paper's core mechanism (Algorithm 1)."""
+"""Unit + property tests for the paper's core mechanism (Algorithm 1).
+
+Property-style invariants run over a fixed (scale, clip, seed) grid rather
+than hypothesis draws — deterministic, same coverage of the clipped /
+unclipped / extreme-scale branches.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
 from repro.configs import DPConfig
 from repro.core.clipping import clip_by_global_norm
@@ -22,9 +25,9 @@ def _tree(key, scale=1.0):
 # ----------------------------- clipping (property) -------------------------
 
 
-@settings(max_examples=30, deadline=None)
-@given(scale=st.floats(1e-3, 1e3), clip=st.floats(0.05, 10.0),
-       seed=st.integers(0, 2**20))
+@pytest.mark.parametrize("scale", [1e-3, 0.05, 1.0, 31.6, 1e3])
+@pytest.mark.parametrize("clip", [0.05, 0.8, 10.0])
+@pytest.mark.parametrize("seed", [0, 7, 123456])
 def test_clip_norm_bounded(scale, clip, seed):
     """Invariant: ‖clip_S(Δ)‖ ≤ S (+ float slack) and direction preserved."""
     tree = _tree(jax.random.PRNGKey(seed), scale)

@@ -47,9 +47,9 @@ def test_clip_accumulate_sweep(clip):
 
 @pytest.mark.parametrize("B,Sq,Sk,H,KV,hd", [
     (2, 256, 256, 4, 2, 64),
-    (1, 128, 512, 8, 8, 128),
+    pytest.param(1, 128, 512, 8, 8, 128, marks=pytest.mark.slow),
     (1, 100, 100, 2, 1, 32),     # unpadded
-    (2, 384, 384, 4, 4, 96),
+    pytest.param(2, 384, 384, 4, 4, 96, marks=pytest.mark.slow),
 ])
 @pytest.mark.parametrize("causal,window", [(True, 0), (True, 128), (False, 0)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])

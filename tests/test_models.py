@@ -12,6 +12,12 @@ from repro.models.layers import pad_vocab
 
 B, S = 2, 16
 
+# tier-1 keeps one representative per family; same-family duplicates run in
+# the slow tier (--runslow) to hold `pytest -x -q` under the time budget
+DUP_FAMILY_ARCHS = {"granite-moe-3b-a800m", "stablelm-12b", "phi3-medium-14b"}
+# heaviest prefill→decode consistency checks (state/cache paths) — slow tier
+HEAVY_PREFILL = {"mamba2-370m", "zamba2-2.7b", "whisper-small", "olmoe-1b-7b"}
+
 
 def _batch(cfg, key):
     kt = jax.random.fold_in(key, 1)
@@ -26,7 +32,9 @@ def _batch(cfg, key):
     return batch
 
 
-@pytest.fixture(scope="module", params=ALL_ARCHS)
+@pytest.fixture(scope="module",
+                params=[pytest.param(a, marks=pytest.mark.slow)
+                        if a in DUP_FAMILY_ARCHS else a for a in ALL_ARCHS])
 def arch_setup(request):
     cfg = get_config(request.param).reduced()
     model = build(cfg)
@@ -42,8 +50,15 @@ def test_forward_shapes_and_finite(arch_setup):
     assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
 
 
-def test_train_step_no_nan(arch_setup):
+# heaviest backward-pass compiles; their families keep gradient coverage in
+# tier-1 via mamba2 (ssm core) and olmoe (moe)
+HEAVY_TRAIN = {"zamba2-2.7b", "whisper-small"}
+
+
+def test_train_step_no_nan(arch_setup, runslow):
     arch, cfg, model, params, batch = arch_setup
+    if arch in HEAVY_TRAIN and not runslow:
+        pytest.skip("slow: pass --runslow to include")
     loss, grads = jax.value_and_grad(model.loss_fn)(params, batch)
     assert np.isfinite(float(loss))
     gnorm = sum(float(jnp.sum(jnp.square(g.astype(jnp.float32))))
@@ -51,10 +66,12 @@ def test_train_step_no_nan(arch_setup):
     assert np.isfinite(gnorm) and gnorm > 0.0
 
 
-def test_prefill_decode_matches_forward(arch_setup):
+def test_prefill_decode_matches_forward(arch_setup, runslow):
     """Decoding token-by-token from a prefix cache must reproduce the
     teacher-forced logits (the KV-cache/state path is consistent)."""
     arch, cfg, model, params, batch = arch_setup
+    if arch in HEAVY_PREFILL and not runslow:
+        pytest.skip("slow: pass --runslow to include")
     # MoE: the inference path is dropless (see moe.moe_ffn); score the
     # reference forward dropless too so both paths dispatch identically.
     kw = {"dropless": True} if cfg.family == "moe" else {}

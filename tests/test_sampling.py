@@ -1,0 +1,111 @@
+"""Client-sampling invariants: host (`fl.sampling` / `PopulationSim`) and
+device (`fl.engine.sample_cohort`) paths."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.fl.engine import sample_cohort
+from repro.fl.population import PopulationSim
+from repro.fl.sampling import fixed_size_sample, poisson_sample, sample_round
+
+# ----------------------------- fixed-size (host) ---------------------------
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+@pytest.mark.parametrize("n,k", [(100, 17), (50, 50), (10, 40), (1, 5)])
+def test_fixed_size_exactly_min_k_unique(seed, n, k):
+    """Returns exactly min(k, |checked|) ids, all unique, all from the pool."""
+    rng = np.random.default_rng(seed)
+    ids = np.arange(1000, 1000 + n)
+    out = fixed_size_sample(rng, ids, k)
+    assert out.shape[0] == min(k, n)
+    assert len(np.unique(out)) == out.shape[0]
+    assert np.isin(out, ids).all()
+
+
+@pytest.mark.parametrize("seed", [0, 5])
+def test_fixed_size_weighted_zero_weight_excluded(seed):
+    rng = np.random.default_rng(seed)
+    ids = np.arange(60)
+    w = np.ones(60)
+    w[::2] = 0.0                      # exclude all even ids
+    w /= w.sum()
+    out = fixed_size_sample(rng, ids, 25, weights=w)
+    assert out.shape[0] == 25
+    assert (out % 2 == 1).all()
+
+
+def test_sample_round_fixed_size_and_marks():
+    pop = PopulationSim(200, availability=0.5, seed=3)
+    rng = np.random.default_rng(3)
+    for r in range(3):
+        ids = sample_round(pop, rng, r, 23)
+        assert ids.shape[0] == 23
+        assert len(np.unique(ids)) == 23
+        assert (pop._last_round[ids] == r).all()
+
+
+def test_sample_round_caps_at_checked_in():
+    """|cohort| = min(qN, #checked-in): tiny availability, huge request."""
+    pop = PopulationSim(40, availability=0.2, seed=0)
+    rng = np.random.default_rng(0)
+    ids = sample_round(pop, rng, 0, 1000)
+    checked = (pop._last_round == 0).sum()
+    assert ids.shape[0] == checked <= 40
+
+
+# ----------------------------- Poisson (host) ------------------------------
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("q", [0.05, 0.2])
+def test_poisson_round_size_concentrates(seed, q):
+    """Poisson round sizes average qN with binomial-scale spread."""
+    rng = np.random.default_rng(seed)
+    N, trials = 2000, 40
+    ids = np.arange(N)
+    sizes = np.array([poisson_sample(rng, ids, q).shape[0]
+                      for _ in range(trials)])
+    mean, std = q * N, np.sqrt(N * q * (1 - q))
+    assert abs(sizes.mean() - mean) < 4 * std / np.sqrt(trials)
+    assert (np.abs(sizes - mean) < 6 * std).all()
+
+
+# ----------------------------- device sampler ------------------------------
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_device_sample_exact_k_unique(seed):
+    key = jax.random.PRNGKey(seed)
+    w = jnp.ones((120,))
+    avail = jnp.ones((120,), bool)
+    ids = np.asarray(sample_cohort(key, w, avail, 30))
+    assert ids.shape[0] == 30
+    assert len(np.unique(ids)) == 30
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_device_sample_zero_weight_excluded(seed):
+    """Weight 0 (and unavailable) devices are never selected while enough
+    positive-weight devices exist."""
+    key = jax.random.PRNGKey(seed)
+    w = jnp.ones((100,)).at[::2].set(0.0)        # even ids weight 0
+    avail = jnp.ones((100,), bool).at[1].set(False)  # id 1 unavailable
+    ids = np.asarray(sample_cohort(key, w, avail, 40))
+    assert ids.shape[0] == 40
+    assert (ids % 2 == 1).all()
+    assert 1 not in ids
+
+
+def test_device_sample_weights_bias_selection():
+    """A 100×-weighted subgroup is selected far above its population share."""
+    heavy = jnp.zeros((200,), bool).at[:20].set(True)
+    w = jnp.where(heavy, 100.0, 1.0)
+    avail = jnp.ones((200,), bool)
+    hits = 0
+    for seed in range(30):
+        ids = np.asarray(sample_cohort(jax.random.PRNGKey(seed), w, avail, 20))
+        hits += int((ids < 20).sum())
+    # uniform sampling would give E[hits] = 30·20·(20/200) = 60
+    assert hits > 300

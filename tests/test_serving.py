@@ -1,11 +1,10 @@
 """Serving path: checkpoint roundtrip, batched generation, ring-buffer
-positional invariants (hypothesis)."""
+positional invariants (checked on a fixed position/window grid covering the
+empty / partial / exactly-full / wrapped buffer regimes)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
 from repro.configs import get_config
 from repro.launch.serve import generate
@@ -70,8 +69,9 @@ def test_generate_dense_with_cache():
 # ----------------------------- ring buffer properties ----------------------
 
 
-@settings(max_examples=50, deadline=None)
-@given(pos=st.integers(0, 10_000), W=st.sampled_from([4, 8, 128, 4096]))
+@pytest.mark.parametrize("pos", [0, 1, 3, 7, 8, 9, 127, 128, 4095, 4096,
+                                 10_000])
+@pytest.mark.parametrize("W", [4, 8, 128, 4096])
 def test_ring_positions_invariants(pos, W):
     """Slot i holds position ≡ i (mod W), within (pos−W, pos], or empty."""
     qs = np.asarray(ring_positions(jnp.asarray(pos), W))
@@ -83,8 +83,8 @@ def test_ring_positions_invariants(pos, W):
     assert int((qs >= 0).sum()) == min(pos + 1, W)
 
 
-@settings(max_examples=20, deadline=None)
-@given(S=st.integers(5, 40), W=st.sampled_from([4, 8, 16]))
+@pytest.mark.parametrize("S", [5, 8, 9, 15, 16, 17, 23, 40])
+@pytest.mark.parametrize("W", [4, 8, 16])
 def test_ring_pack_places_positions(S, W):
     """After packing a length-S prefill, slot p%W holds position p for the
     last W positions."""

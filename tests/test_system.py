@@ -14,17 +14,17 @@ from repro.fl.round import FederatedTrainer
 from repro.models import build
 from repro.models.layers import lm_loss
 
-VOCAB = 1000
+VOCAB = 500
 
 
 @pytest.fixture(scope="module")
 def setup():
-    cfg = get_config("gboard-cifg-lstm").with_(vocab=VOCAB, d_model=48,
-                                               d_ff=96)
+    cfg = get_config("gboard-cifg-lstm").with_(vocab=VOCAB, d_model=32,
+                                               d_ff=64)
     model = build(cfg)
     corpus = BigramCorpus(vocab_size=VOCAB, seed=0)
-    ds = FederatedDataset(corpus, n_users=120, seq_len=16,
-                          sentences_per_user=25)
+    ds = FederatedDataset(corpus, n_users=100, seq_len=16,
+                          sentences_per_user=20)
     return cfg, model, corpus, ds
 
 
@@ -36,16 +36,20 @@ def _held_out_loss(cfg, model, params, corpus):
 
 
 def test_dp_fedavg_end_to_end_improves(setup):
+    """Trains on the compiled engine (the default multi-round path)."""
     cfg, model, corpus, ds = setup
     dp = DPConfig(clients_per_round=30, noise_multiplier=0.3, clip_norm=0.8,
                   server_opt="momentum", server_lr=0.5, server_momentum=0.9)
     cl = ClientConfig(local_epochs=1, batch_size=10, lr=0.3)
-    tr = FederatedTrainer(model, ds, dp, cl, n_local_batches=2, seed=0)
+    from repro.fl.population import PopulationSim
+    pop = PopulationSim(len(ds.users), availability=0.6, seed=0)
+    tr = FederatedTrainer(model, ds, dp, cl, pop=pop, n_local_batches=2,
+                          seed=0, backend="engine", rounds_per_call=10)
     before = _held_out_loss(cfg, model, tr.state.params, corpus)
-    tr.train(25)
+    tr.train(20)
     after = _held_out_loss(cfg, model, tr.state.params, corpus)
     assert after < before - 1.0, (before, after)
-    assert tr.accountant.rounds == 25
+    assert tr.accountant.rounds == 20
     eps = tr.accountant.get_epsilon(1e-5)
     assert 0 < eps < 1e4
 
@@ -86,13 +90,18 @@ def test_fixed_size_rounds(setup):
 
 def test_noise_perturbs_but_preserves_scale(setup):
     """Same data/seed, with vs without noise: params differ by ~σ-scale."""
+    from repro.fl.population import PopulationSim
     cfg, model, corpus, ds = setup
     cl = ClientConfig(local_epochs=1, batch_size=10, lr=0.3)
     outs = {}
     for z in (0.0, 1.0):
         dp = DPConfig(clients_per_round=20, noise_multiplier=z,
                       clip_norm=0.8, server_opt="sgd", server_lr=1.0)
-        tr = FederatedTrainer(model, ds, dp, cl, n_local_batches=2, seed=3)
+        # enough checked-in devices that the round really has qN=20 clients
+        # (σ below assumes the full cohort)
+        pop = PopulationSim(len(ds.users), availability=0.6, seed=3)
+        tr = FederatedTrainer(model, ds, dp, cl, pop=pop, n_local_batches=2,
+                              seed=3)
         tr.run_round()
         outs[z] = tr.state.params
     diffs = jax.tree_util.tree_map(lambda a, b: jnp.max(jnp.abs(a - b)),

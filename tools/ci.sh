@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# Tier-1 CI gate: fast deterministic tests + a compiled-engine smoke.
+#
+#   tools/ci.sh            # tier-1 (< 2 min target) + engine bench smoke
+#   tools/ci.sh --slow     # additionally run @pytest.mark.slow tests
+#
+# Test tiers (see ROADMAP.md):
+#   tier-1: PYTHONPATH=src python -m pytest -x -q        — every PR, no
+#           network, no hypothesis, deterministic seeds, CPU-only
+#   slow:   pytest --runslow                              — compile sweeps,
+#           long training runs; nightly / pre-release
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1: pytest -x -q =="
+python -m pytest -x -q
+
+if [[ "${1:-}" == "--slow" ]]; then
+  echo "== slow tier: pytest --runslow =="
+  python -m pytest -q --runslow -m slow
+fi
+
+echo "== smoke: compiled simulation engine benchmark (dry run) =="
+PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+  python benchmarks/bench_sim_engine.py --dry-run
+
+echo "CI OK"
