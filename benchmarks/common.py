@@ -1,6 +1,15 @@
-"""Shared benchmark plumbing: timing + CSV emission."""
+"""Shared benchmark plumbing: timing + CSV emission + machine-readable JSON.
+
+Every ``emit()`` prints a ``name,us_per_call,derived`` CSV line; when the
+``BENCH_JSON`` environment variable names a file, it *additionally* appends
+one JSON record per line (``{"name", "us_per_call", "derived"}``) so CI can
+archive the perf trajectory (`tools/ci.sh` writes ``BENCH_ci.json`` this
+way and uploads it as an artifact).
+"""
 from __future__ import annotations
 
+import json
+import os
 import time
 from typing import Callable
 
@@ -16,3 +25,9 @@ def timed(fn: Callable, *args, repeats: int = 1, **kw):
 
 def emit(name: str, us_per_call: float, derived):
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+    path = os.environ.get("BENCH_JSON")
+    if path:
+        with open(path, "a") as f:
+            f.write(json.dumps({"name": name,
+                                "us_per_call": round(float(us_per_call), 1),
+                                "derived": str(derived)}) + "\n")

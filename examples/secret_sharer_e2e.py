@@ -8,8 +8,8 @@ Random-Sampling rank and Beam Search.
 import jax
 
 from repro.configs import ClientConfig, DPConfig, get_config
-from repro.core.secret_sharer import (canary_extracted, make_canaries,
-                                      random_sampling_rank)
+from repro.core.secret_sharer import (canary_eval_fn, canary_extracted,
+                                      make_canaries, random_sampling_rank)
 from repro.data.corpus import BigramCorpus
 from repro.data.federated import FederatedDataset
 from repro.fl.round import FederatedTrainer
@@ -33,9 +33,20 @@ print(f"population: {len(dataset.users)} devices "
 dp = DPConfig(clients_per_round=40, noise_multiplier=0.3, clip_norm=0.8,
               server_opt="momentum", server_lr=0.5, server_momentum=0.9)
 client = ClientConfig(local_epochs=1, batch_size=10, lr=0.3)
-trainer = FederatedTrainer(model, dataset, dp, client, n_local_batches=3)
+# compiled engine backend with the in-scan canary hook: the
+# memorization-vs-round curve is recorded while training
+trainer = FederatedTrainer(model, dataset, dp, client, n_local_batches=3,
+                           backend="engine", rounds_per_call=20,
+                           eval_fn=canary_eval_fn(model, canaries),
+                           eval_every=20)
 print("training 80 rounds with canary devices in the population ...")
 trainer.train(80, log_every=20)
+
+ev = trainer.eval_history
+for r, row in zip(ev["round"][ev["mask"]],
+                  ev["values"]["canary_logppl"][ev["mask"]]):
+    lps = "  ".join(f"{v:6.2f}" for v in row)
+    print(f"  round {int(r):3d}  canary -log P(s|p): {lps}")
 
 print("\n(n_u, n_e) -> RS rank (of 10k) | beam-extracted?   [paper Table 4]")
 for c in canaries:

@@ -117,6 +117,12 @@ class DPConfig:
     clip_norm: float = 0.8          # S
     noise_multiplier: float = 0.8   # z  (σ = z·S/(qN); paper: σ=3.2e-5, qN=20000 → z=0.8)
     clients_per_round: int = 20_000  # qN
+    # round composition: "fixed" = exactly qN users WOR (Algorithm 1, the
+    # deployed mechanism); "poisson" = each user i.i.d. Bernoulli(q) per
+    # round [MRTZ17] — variable-size rounds, Δ̄ and σ still divided by the
+    # *expected* round size qN. The accountant picks the matching bound
+    # (WBK19 vs MTZ19) from this field.
+    sampling: str = "fixed"         # "fixed" | "poisson"
     population: int = 4_000_000     # N (best estimate, paper §V-A)
     total_rounds: int = 2_000       # T
     server_opt: str = "momentum"    # sgd | momentum | adam  (Table 6)

@@ -5,15 +5,18 @@ from repro.core.accountant import MomentsAccountant, table5_epsilon
 from repro.core.clipping import clip_by_global_norm
 from repro.core.dp_fedavg import (RoundStats, aggregate, dp_fedavg_round,
                                   finalize_round, server_step)
-from repro.core.secret_sharer import (Canary, beam_search, canary_extracted,
+from repro.core.secret_sharer import (Canary, beam_search, canary_eval_fn,
+                                      canary_extracted, canary_matrix,
                                       log_perplexity, make_canaries,
-                                      random_sampling_rank)
+                                      random_sampling_rank,
+                                      random_sampling_ranks, score_canaries)
 from repro.core.server_optim import ServerOptState, apply_update, init_state
 
 __all__ = [
     "MomentsAccountant", "table5_epsilon", "clip_by_global_norm",
     "RoundStats", "aggregate", "dp_fedavg_round", "finalize_round",
-    "server_step", "Canary", "beam_search", "canary_extracted",
-    "log_perplexity", "make_canaries", "random_sampling_rank",
+    "server_step", "Canary", "beam_search", "canary_eval_fn",
+    "canary_extracted", "canary_matrix", "log_perplexity", "make_canaries",
+    "random_sampling_rank", "random_sampling_ranks", "score_canaries",
     "ServerOptState", "apply_update", "init_state",
 ]

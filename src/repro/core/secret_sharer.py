@@ -45,14 +45,42 @@ def make_canaries(key, vocab: int,
                                                      (4, 1), (4, 14), (4, 200),
                                                      (16, 1), (16, 14), (16, 200)),
                   per_config: int = 3, length: int = CANARY_LEN) -> List[Canary]:
-    """The paper's 3 canaries × 9 (n_u, n_e) configurations (§IV-A)."""
+    """``per_config`` canaries for each (n_u, n_e) configuration in ``grid``
+    (the paper's §IV-A setup is the default: 3 canaries × 9 configs = 27).
+
+    Canaries whose ``PREFIX_LEN``-word prefix collides with an earlier
+    canary's are redrawn: beam-search extraction conditions on the prefix, so
+    two canaries sharing one would compete for the same beam and the
+    per-canary extracted/not-extracted verdict would be ill-defined.
+    """
+    total = len(grid) * per_config
+    space = vocab ** PREFIX_LEN
+    if total > space:
+        raise ValueError(
+            f"cannot draw {total} canaries with distinct {PREFIX_LEN}-word "
+            f"prefixes from a {vocab}-word vocabulary ({space} prefixes)")
     canaries = []
+    seen = set()
     for (n_u, n_e) in grid:
-        for i in range(per_config):
-            key, sub = jax.random.split(key)
-            toks = jax.random.randint(sub, (length,), 0, vocab)
-            canaries.append(Canary(tuple(int(t) for t in toks), n_u, n_e))
+        for _ in range(per_config):
+            for _attempt in range(10_000):
+                key, sub = jax.random.split(key)
+                toks = tuple(int(t) for t in
+                             jax.random.randint(sub, (length,), 0, vocab))
+                if toks[:PREFIX_LEN] not in seen:
+                    break
+            else:
+                raise RuntimeError("make_canaries: could not draw a "
+                                   "collision-free prefix in 10k attempts")
+            seen.add(toks[:PREFIX_LEN])
+            canaries.append(Canary(toks, n_u, n_e))
     return canaries
+
+
+def canary_matrix(canaries: Sequence[Canary]) -> np.ndarray:
+    """Stack canary token sequences into a (K, CANARY_LEN) int32 matrix —
+    the batched-scoring layout used by :func:`score_canaries`."""
+    return np.asarray([c.tokens for c in canaries], np.int32)
 
 
 # ---------------------------------------------------------------------------
@@ -73,6 +101,32 @@ def _batched_log_perplexity(params, seqs, model: Model, prefix_len: int):
     return -jnp.sum(cont, axis=-1)
 
 
+def score_canaries(model: Model, params, canary_tokens,
+                   prefix_len: int = PREFIX_LEN):
+    """Vectorized canary log-perplexity kernel: (K, L) token batch →
+    (K,) Σ −log Pr(continuation | prefix).
+
+    Pure traced JAX (no jit wrapper, no host transfer), so it composes both
+    ways the harness needs it: as the body of an in-scan eval hook
+    (memorization-vs-round curves via ``SimEngine(eval_fn=...)``) and, jitted
+    by the caller, as the chunk kernel for large-|R| Random-Sampling rank
+    scoring (:func:`random_sampling_ranks`).
+    """
+    return _batched_log_perplexity(params, jnp.asarray(canary_tokens),
+                                   model, prefix_len)
+
+
+def canary_eval_fn(model: Model, canaries: Sequence[Canary]):
+    """Build a ``SimEngine`` eval hook scoring all ``canaries`` each call:
+    ``eval_fn(params, round_idx) -> {"canary_logppl": (K,) f32}``."""
+    toks = jnp.asarray(canary_matrix(canaries))
+
+    def eval_fn(params, round_idx):
+        return {"canary_logppl": score_canaries(model, params, toks)}
+
+    return eval_fn
+
+
 def log_perplexity(model: Model, params, sequences: np.ndarray,
                    prefix_len: int = PREFIX_LEN, batch_size: int = 512) -> np.ndarray:
     """Score many (prefix+continuation) sequences; returns np.float32 (N,)."""
@@ -91,25 +145,48 @@ def log_perplexity(model: Model, params, sequences: np.ndarray,
     return np.concatenate(out)
 
 
-def random_sampling_rank(model: Model, params, canary: Canary, key,
-                         n_samples: int = 100_000,
-                         batch_size: int = 1024) -> int:
-    """rank_θ(c; R) = |{r ∈ R : P_θ(r|p) < P_θ(s|p)}|   (paper §IV-A.1)."""
+def random_sampling_ranks(model: Model, params, canaries: Sequence[Canary],
+                          key, n_samples: int = 100_000,
+                          batch_size: int = 1024) -> np.ndarray:
+    """rank_θ(c; R) = |{r ∈ R : P_θ(r|p) < P_θ(s|p)}| for *all* canaries at
+    once (paper §IV-A.1). One shared pool of |R| random continuations is
+    scored behind every canary's prefix in (K·batch_size)-sequence chunks,
+    so sweep-scale |R| (the paper uses 2·10⁶) costs one jit compile and
+    K·|R|/batch_size batched forward passes. Returns int64 (K,) ranks."""
+    K = len(canaries)
     vocab = model.cfg.vocab
     cont_len = CANARY_LEN - PREFIX_LEN
-    canary_seq = np.asarray(canary.tokens, np.int32)[None, :]
-    canary_score = float(log_perplexity(model, params, canary_seq)[0])
-    rank = 0
+    toks = canary_matrix(canaries)
+    prefixes = jnp.asarray(toks[:, :PREFIX_LEN])
+
+    scorer = jax.jit(partial(score_canaries, model))
+    canary_scores = np.asarray(scorer(params, jnp.asarray(toks)))
+
+    @jax.jit
+    def chunk_scores(p, conts):                       # conts: (b, cont_len)
+        b = conts.shape[0]
+        seqs = jnp.concatenate(
+            [jnp.broadcast_to(prefixes[:, None], (K, b, PREFIX_LEN)),
+             jnp.broadcast_to(conts[None], (K, b, cont_len))], axis=-1)
+        return score_canaries(model, p, seqs.reshape(K * b, CANARY_LEN)
+                              ).reshape(K, b)
+
+    ranks = np.zeros(K, np.int64)
     for i in range(0, n_samples, batch_size):
         b = min(batch_size, n_samples - i)
         key, sub = jax.random.split(key)
-        conts = jax.random.randint(sub, (b, cont_len), 0, vocab)
-        seqs = np.concatenate(
-            [np.tile(np.asarray(canary.prefix, np.int32), (b, 1)),
-             np.asarray(conts, np.int32)], axis=1)
-        scores = log_perplexity(model, params, seqs, batch_size=batch_size)
-        rank += int(np.sum(scores < canary_score))
-    return rank
+        conts = jax.random.randint(sub, (batch_size, cont_len), 0, vocab)
+        scores = np.asarray(chunk_scores(params, conts))[:, :b]
+        ranks += (scores < canary_scores[:, None]).sum(axis=1)
+    return ranks
+
+
+def random_sampling_rank(model: Model, params, canary: Canary, key,
+                         n_samples: int = 100_000,
+                         batch_size: int = 1024) -> int:
+    """Single-canary convenience wrapper over :func:`random_sampling_ranks`."""
+    return int(random_sampling_ranks(model, params, [canary], key,
+                                     n_samples, batch_size)[0])
 
 
 # ---------------------------------------------------------------------------

@@ -69,7 +69,18 @@ class FederatedDataset:
     def inject_canaries(self, canaries: Sequence[Canary]) -> List[UserShard]:
         """Create the paper's secret-sharing synthetic devices: for each
         canary, n_u devices each holding n_e canary copies + (200−n_e) public
-        sentences. Appends them to the population; returns them."""
+        sentences. Appends them to the population; returns them.
+
+        Canaries must have pairwise-distinct 2-word prefixes — duplicates
+        included (injecting the same canary twice would silently double its
+        n_u). Beam-search extraction conditions on the prefix;
+        `make_canaries` already guarantees distinctness, hand-built lists
+        are validated here."""
+        prefixes = [c.prefix for c in canaries]
+        if len(set(prefixes)) != len(prefixes):
+            raise ValueError("injected canaries share a beam-search prefix "
+                             "(or repeat a canary — n_u controls device "
+                             "count); redraw them (see make_canaries)")
         synthetic = []
         next_id = len(self.users)
         for ci, c in enumerate(canaries):
@@ -87,6 +98,13 @@ class FederatedDataset:
                 synthetic.append(shard)
                 next_id += 1
         return synthetic
+
+    def canaries(self) -> List[Canary]:
+        """Distinct injected canaries, in injection order — index-aligned
+        with the (K,) outputs of `repro.core.secret_sharer.canary_eval_fn`
+        built from this list."""
+        return list(dict.fromkeys(
+            u.canary for u in self.users if u.canary is not None))
 
     def user_batches(self, user_id: int, batch_size: int,
                      rng: np.random.Generator) -> List[Dict[str, np.ndarray]]:

@@ -51,9 +51,14 @@ def user_update(model: Model, params0, batches, client: ClientConfig,
 
 
 def round_compute(model: Model, params, stacked_batches,
-                  client: ClientConfig, dp: DPConfig):
+                  client: ClientConfig, dp: DPConfig, mask=None):
     """Pure round body: (params, stacked client batches (C, nb, B, S)) →
     (sum of clipped updates, mean norm, frac clipped, mean loss).
+
+    ``mask`` (optional (C,) 0/1) folds per-slot participation into the
+    weighted sum — Poisson-sampled variable-size rounds keep a fixed-shape
+    cohort buffer and zero out the unselected slots here, so the clipped sum
+    and the per-round stats only see the clients that actually participated.
 
     Traceable — the simulation engine inlines this into its scan body;
     :func:`make_round_fn` wraps it in jit for the per-round host loop.
@@ -62,8 +67,15 @@ def round_compute(model: Model, params, stacked_batches,
         return user_update(model, params, batches, client, dp)
 
     clipped, norms, flags, losses = jax.vmap(one)(stacked_batches)
-    total = jax.tree_util.tree_map(lambda l: jnp.sum(l, axis=0), clipped)
-    return total, jnp.mean(norms), jnp.mean(flags), jnp.mean(losses)
+    if mask is None:
+        total = jax.tree_util.tree_map(lambda l: jnp.sum(l, axis=0), clipped)
+        return total, jnp.mean(norms), jnp.mean(flags), jnp.mean(losses)
+    m = mask.astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(m), 1.0)
+    total = jax.tree_util.tree_map(
+        lambda l: jnp.tensordot(m, l.astype(jnp.float32), axes=1), clipped)
+    return (total, jnp.sum(norms * m) / denom, jnp.sum(flags * m) / denom,
+            jnp.sum(losses * m) / denom)
 
 
 def make_round_fn(model: Model, client: ClientConfig, dp: DPConfig):

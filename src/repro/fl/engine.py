@@ -20,7 +20,19 @@ a single ``lax.scan``:
 * **round** — the clip → sum → noise → server-optimizer (Nesterov) step of
   Algorithm 1 fused into the scan body (`repro.fl.client.round_compute` +
   `repro.core.dp_fedavg.finalize_round`), with state buffers donated across
-  calls.
+  calls;
+* **eval hooks** — a user-supplied ``eval_fn(params, round_idx) -> pytree``
+  evaluated *inside* the scan body every ``eval_every`` rounds (a masked
+  ``lax.cond`` skips the computation on the other rounds), with stacked
+  per-round outputs returned in the history next to the training metrics.
+  This is what makes memorization-vs-round curves (in-scan canary
+  log-perplexity, paper Fig. style) practical at thousands of rounds;
+* **Poisson rounds** — ``sampling="poisson"`` draws each available device
+  i.i.d. Bernoulli(q = qN/N) per round [MRTZ17]. Rounds are variable-size
+  but shapes stay static: the first ``poisson_buffer`` selected devices fill
+  a fixed-shape cohort buffer and a 0/1 slot mask is folded into the
+  weighted sum (`round_compute(mask=...)`); Δ̄ and σ keep the DPConfig
+  calibration z·S/(qN) against the *expected* round size.
 
 `run` (compiled scan) and `run_python` (per-round jit, Python loop) execute
 the *same* traced round body from the same PRNG stream, so they sample
@@ -84,6 +96,24 @@ def sample_cohort(key, weights, available, cohort: int):
     return jax.random.choice(key, w.shape[0], (cohort,), replace=False, p=p)
 
 
+def poisson_select(key, q: float, available, buffer: int):
+    """Per-device Bernoulli(q) round composition [MRTZ17] with static shapes.
+
+    Draws ``sel[i] ~ Bernoulli(q)`` for every *available* device, then packs
+    the first ``buffer`` selected device ids (index order — a Poisson round
+    is an unordered set) into a fixed-shape cohort buffer. Returns
+    ``(ids (buffer,), slot_mask (buffer,) bool, took (N,) bool)`` where
+    ``took`` marks exactly the devices occupying a buffer slot. Overflow
+    beyond ``buffer`` is truncated; size the buffer ≥ qN + 4·√(qN) so that
+    tail is negligible (`SimEngine` warns otherwise).
+    """
+    sel = (jax.random.uniform(key, available.shape) < q) & available
+    took = sel & (jnp.cumsum(sel) <= buffer)
+    ids = jnp.nonzero(took, size=buffer, fill_value=0)[0]
+    slot_mask = jnp.arange(buffer) < jnp.sum(took)
+    return ids, slot_mask, took
+
+
 def gather_client_batches(examples, counts, ids, key,
                           n_batches: int, batch_size: int):
     """Build the (C, n_batches, B, S) client batch stack by pure gathers from
@@ -109,6 +139,16 @@ class SimEngine:
     availability / Pace-Steering parameters mirror ``PopulationSim``; pass
     ``weight_fn(last_round, synthetic, round_idx) -> (N,) weights`` to
     replace the Pace-Steering prior (e.g. for sampling-skew ablations).
+
+    ``sampling`` defaults to ``dp.sampling``: ``"fixed"`` rounds of exactly
+    qN devices (Algorithm 1), or ``"poisson"`` variable-size rounds (each
+    available device i.i.d. Bernoulli(qN/N); Pace-Steering weights don't
+    apply — inclusion probability is uniform, matching the host
+    ``sample_round(scheme="poisson")`` reference).
+
+    ``eval_fn(params, round_idx) -> pytree`` runs inside the scan on the
+    *post-update* params after rounds ``eval_every, 2·eval_every, …``; other
+    rounds carry zeros (see history keys ``eval`` / ``eval_mask``).
     """
 
     def __init__(self, model: Model, data: Dict[str, np.ndarray],
@@ -116,21 +156,46 @@ class SimEngine:
                  n_local_batches: int = 4, availability: float = 0.1,
                  pace_cooldown: int = 50, pace_penalty: float = 0.01,
                  rounds_per_call: int = 8,
-                 weight_fn: Optional[Callable] = None):
+                 weight_fn: Optional[Callable] = None,
+                 sampling: Optional[str] = None,
+                 poisson_buffer: Optional[int] = None,
+                 eval_fn: Optional[Callable] = None, eval_every: int = 1):
         self.model = model
         self.dp = dp
         self.client = client
         self.n_local_batches = n_local_batches
         self.availability = availability
         self.rounds_per_call = max(int(rounds_per_call), 1)
+        self.sampling = sampling or getattr(dp, "sampling", "fixed")
+        if self.sampling not in ("fixed", "poisson"):
+            raise ValueError(f"sampling must be 'fixed' or 'poisson', "
+                             f"got {self.sampling!r}")
+        self.eval_fn = eval_fn
+        self.eval_every = max(int(eval_every), 1)
         self.examples = jnp.asarray(data["examples"])
         self.counts = jnp.asarray(data["counts"])
         self.synthetic = jnp.asarray(data["synthetic"])
         self.n_users = int(self.examples.shape[0])
         self.cohort = min(dp.clients_per_round, self.n_users)
+        self.q = self.cohort / self.n_users
+        if self.sampling == "poisson":
+            buf = poisson_buffer or int(np.ceil(
+                self.cohort + 4.0 * np.sqrt(self.cohort) + 4))
+            self.buffer = min(self.n_users, buf)
+            if self.buffer < self.cohort + 2 * np.sqrt(self.cohort) \
+                    and self.buffer < self.n_users:
+                import warnings
+                warnings.warn(
+                    f"SimEngine: poisson_buffer={self.buffer} is within 2σ "
+                    f"of the expected round size qN={self.cohort}; rounds "
+                    "will regularly be truncated (the clipped sum silently "
+                    "drops the overflow). Raise poisson_buffer.",
+                    stacklevel=2)
+        else:
+            self.buffer = self.cohort
         n_synth = int(np.asarray(data["synthetic"]).sum())
         expected_avail = availability * (self.n_users - n_synth) + n_synth
-        if expected_avail < self.cohort:
+        if self.sampling == "fixed" and expected_avail < self.cohort:
             import warnings
             warnings.warn(
                 f"SimEngine: expected check-ins ({expected_avail:.0f} = "
@@ -139,6 +204,17 @@ class SimEngine:
                 "will regularly be topped up from un-checked-in devices and "
                 "σ = zS/qN assumes the full cohort. Raise availability / "
                 "population or lower clients_per_round.", stacklevel=2)
+        if self.sampling == "poisson" \
+                and self.q * expected_avail < 0.9 * self.cohort:
+            import warnings
+            warnings.warn(
+                f"SimEngine: Poisson rounds select Bernoulli(q={self.q:.3g})"
+                f" among *available* devices — expected realized round size "
+                f"({self.q * expected_avail:.0f}) is well below qN "
+                f"({self.cohort}) while σ = zS/qN assumes qN. Per-round SNR "
+                "will be worse than the DPConfig calibration implies; raise "
+                "availability (MRTZ17 assumes the whole population is "
+                "available) or lower clients_per_round.", stacklevel=2)
         self.weight_fn = weight_fn or (
             lambda last, synth, r: pace_steering_weights(
                 last, synth, r, pace_cooldown, pace_penalty))
@@ -166,24 +242,46 @@ class SimEngine:
         key, k_avail, k_sample, k_idx, k_noise = jax.random.split(state.key, 5)
         avail = (jax.random.uniform(k_avail, (self.n_users,))
                  < self.availability) | self.synthetic
-        w = self.weight_fn(state.last_round, self.synthetic, state.round_idx)
-        ids = sample_cohort(k_sample, w, avail, self.cohort)
+        if self.sampling == "poisson":
+            ids, mask, took = poisson_select(k_sample, self.q, avail,
+                                             self.buffer)
+            last_round = jnp.where(took, state.round_idx, state.last_round)
+            participation = state.participation + took.astype(jnp.int32)
+            n_clients = jnp.sum(took).astype(jnp.int32)
+        else:
+            w = self.weight_fn(state.last_round, self.synthetic,
+                               state.round_idx)
+            ids = sample_cohort(k_sample, w, avail, self.cohort)
+            mask = None
+            last_round = state.last_round.at[ids].set(state.round_idx)
+            participation = state.participation.at[ids].add(1)
+            n_clients = jnp.asarray(self.cohort, jnp.int32)
         batches = gather_client_batches(self.examples, self.counts, ids,
                                         k_idx, self.n_local_batches,
                                         self.client.batch_size)
         total, mean_norm, frac_clipped, loss = round_compute(
-            self.model, state.params, batches, self.client, self.dp)
+            self.model, state.params, batches, self.client, self.dp,
+            mask=mask)
+        # Δ̄ and σ are calibrated against qN — the exact round size in fixed
+        # mode, the *expected* one under Poisson sampling [MRTZ17].
         delta, stats = finalize_round(total, self.cohort, k_noise, self.dp,
                                       stats=(mean_norm, frac_clipped))
         params, opt_state = server_step(state.params, state.opt_state, delta,
                                         self.dp)
-        new_state = EngineState(
-            params, opt_state, key,
-            state.last_round.at[ids].set(state.round_idx),
-            state.participation.at[ids].add(1),
-            state.round_idx + 1)
+        new_state = EngineState(params, opt_state, key, last_round,
+                                participation, state.round_idx + 1)
         rec = {"loss": loss, "mean_update_norm": mean_norm,
-               "frac_clipped": frac_clipped, "noise_std": stats.noise_std}
+               "frac_clipped": frac_clipped, "noise_std": stats.noise_std,
+               "n_clients": n_clients}
+        if self.eval_fn is not None:
+            do = ((state.round_idx + 1) % self.eval_every) == 0
+            out_shapes = jax.eval_shape(self.eval_fn, params, state.round_idx)
+            zeros = jax.tree_util.tree_map(
+                lambda s: jnp.zeros(s.shape, s.dtype), out_shapes)
+            rec["eval"] = jax.lax.cond(
+                do, lambda p: self.eval_fn(p, state.round_idx),
+                lambda p: zeros, params)
+            rec["eval_mask"] = do
         return new_state, rec
 
     def _run_k(self, k: int) -> Callable:
@@ -200,7 +298,9 @@ class SimEngine:
     def run(self, state: EngineState, n_rounds: int
             ) -> Tuple[EngineState, Dict[str, np.ndarray]]:
         """Compiled path: scan ``rounds_per_call`` rounds per jit call.
-        Returns (state, history dict of (n_rounds,) numpy arrays)."""
+        Returns (state, history pytree of arrays with a leading (n_rounds,)
+        axis — scalars per round for the training metrics, the stacked
+        ``eval_fn`` output pytree under ``"eval"`` when a hook is set)."""
         if n_rounds <= 0:
             return state, {}
         hists = []
@@ -210,7 +310,8 @@ class SimEngine:
             state, h = self._run_k(k)(state)
             hists.append(jax.device_get(h))
             left -= k
-        hist = {k: np.concatenate([h[k] for h in hists]) for k in hists[0]}
+        hist = jax.tree_util.tree_map(
+            lambda *xs: np.concatenate(xs), *hists)
         return state, hist
 
     def run_python(self, state: EngineState, n_rounds: int
@@ -224,5 +325,5 @@ class SimEngine:
         for _ in range(n_rounds):
             state, rec = self._one_round(state)
             recs.append(jax.device_get(rec))
-        hist = {k: np.asarray([r[k] for r in recs]) for k in recs[0]}
+        hist = jax.tree_util.tree_map(lambda *xs: np.stack(xs), *recs)
         return state, hist

@@ -49,3 +49,22 @@ class PopulationSim:
 
     def mark_participated(self, ids: np.ndarray, round_idx: int) -> None:
         self._last_round[ids] = round_idx
+
+    def absorb_last_round(self, last_round: np.ndarray) -> None:
+        """Overwrite the Pace-Steering recency vector wholesale — used to
+        mirror device-resident engine state (`EngineState.last_round`) back
+        into the host population after an engine run."""
+        self._last_round = np.asarray(last_round, np.int64)
+
+
+def participation_rates(participation: np.ndarray, synthetic: np.ndarray,
+                        rounds: int):
+    """(synthetic, real) mean participations *per round* from a per-device
+    participation-count vector — works on both the host `PopulationSim`
+    tallies and `SimEngine` state (`EngineState.participation`), which is
+    how Table 3's synthetic-vs-real participation gap is measured."""
+    part = np.asarray(participation, np.float64)
+    synth = np.asarray(synthetic, bool)
+    synth_rate = part[synth].mean() / rounds if synth.any() else 0.0
+    real_rate = part[~synth].mean() / rounds if (~synth).any() else 0.0
+    return synth_rate, real_rate

@@ -11,6 +11,12 @@ distributed round is `repro.launch.steps.fed_train_step`. Three backends:
 * ``"host"`` — the original numpy-sampling, host-stacking loop. Kept as the
   independent reference implementation exercising `PopulationSim` /
   `fl.sampling` and real host data movement.
+
+``sampling`` (default ``dp.sampling``) selects fixed-size rounds (Algorithm
+1) or Poisson-composed variable-size rounds on every backend; the accountant
+is constructed with the matching bound. Engine backends additionally accept
+an in-scan ``eval_fn(params, round_idx)`` hook (see `repro.fl.engine`),
+whose stacked outputs land in ``trainer.eval_history``.
 """
 from __future__ import annotations
 
@@ -50,7 +56,8 @@ class FederatedTrainer:
                  dp: DPConfig, client: ClientConfig,
                  pop: Optional[PopulationSim] = None, seed: int = 0,
                  n_local_batches: int = 4, backend: str = "host",
-                 rounds_per_call: int = 8):
+                 rounds_per_call: int = 8, sampling: Optional[str] = None,
+                 eval_fn=None, eval_every: int = 1):
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}, "
                              f"got {backend!r}")
@@ -60,6 +67,10 @@ class FederatedTrainer:
         self.client = client
         self.n_local_batches = n_local_batches
         self.backend = backend
+        self.sampling = sampling or getattr(dp, "sampling", "fixed")
+        if self.sampling not in ("fixed", "poisson"):
+            raise ValueError(f"sampling must be 'fixed' or 'poisson', "
+                             f"got {self.sampling!r}")
         synth = [u.user_id for u in dataset.users if u.is_synthetic]
         self.pop = pop or PopulationSim(len(dataset.users),
                                         synthetic_ids=synth, seed=seed)
@@ -67,12 +78,20 @@ class FederatedTrainer:
         self.key = jax.random.PRNGKey(seed)
         self.accountant = acct.MomentsAccountant(
             q=dp.clients_per_round / max(len(dataset.users), 1),
-            noise_multiplier=dp.noise_multiplier, sampling="wor")
+            noise_multiplier=dp.noise_multiplier,
+            sampling="poisson" if self.sampling == "poisson" else "wor")
         params = model.init(jax.random.PRNGKey(seed + 1))
         self.state = TrainerState(params, init_state(params))
         self.participation = np.zeros(len(dataset.users), np.int64)
+        # in-scan eval hook output, accumulated across engine chunks:
+        # {"round": (n,), "mask": (n,) bool, "values": stacked eval pytree}
+        self.eval_history: Optional[Dict] = None
 
         if backend == "host":
+            if eval_fn is not None:
+                raise ValueError("eval_fn is an engine-backend feature "
+                                 "(in-scan hook); score params post hoc on "
+                                 "the host backend instead")
             self._round_fn = make_round_fn(model, client, dp)
             self.engine = None
             self._estate = None
@@ -93,7 +112,9 @@ class FederatedTrainer:
                 availability=self.pop.availability,
                 pace_cooldown=self.pop.pace_cooldown,
                 pace_penalty=self.pop.pace_penalty,
-                rounds_per_call=rounds_per_call)
+                rounds_per_call=rounds_per_call,
+                sampling=self.sampling,
+                eval_fn=eval_fn, eval_every=eval_every)
             self._estate = self.engine.init_state(
                 params, seed=seed, opt_state=self.state.opt_state)
 
@@ -109,12 +130,23 @@ class FederatedTrainer:
     def _run_round_host(self) -> Dict:
         s = self.state
         ids = sample_round(self.pop, self.rng, s.round_idx,
-                           self.dp.clients_per_round)
+                           self.dp.clients_per_round, scheme=self.sampling)
         self.participation[ids] += 1
-        stacked = self._stack_clients(ids)
-        total, mean_norm, frac_clipped, loss = self._round_fn(s.params, stacked)
+        if len(ids):
+            stacked = self._stack_clients(ids)
+            total, mean_norm, frac_clipped, loss = self._round_fn(s.params,
+                                                                  stacked)
+        else:  # an empty Poisson round still takes a (pure-noise) server step
+            total = jax.tree_util.tree_map(
+                lambda l: jnp.zeros_like(l, jnp.float32), s.params)
+            mean_norm = frac_clipped = loss = jnp.zeros(())
         self.key, sub = jax.random.split(self.key)
-        delta, stats = finalize_round(total, len(ids), sub, self.dp,
+        # Poisson rounds divide by the *expected* round size qN [MRTZ17] so
+        # σ matches the engine and the DPConfig calibration; fixed rounds by
+        # the realized (= configured) size as in Algorithm 1.
+        denom = (len(ids) if self.sampling == "fixed"
+                 else self.dp.clients_per_round)
+        delta, stats = finalize_round(total, denom, sub, self.dp,
                                       stats=(mean_norm, frac_clipped))
         s.params, s.opt_state = server_step(s.params, s.opt_state, delta,
                                             self.dp)
@@ -130,6 +162,16 @@ class FederatedTrainer:
 
     # ----------------------------------------------------------- engine path
 
+    def _append_eval(self, rounds_arr: np.ndarray, mask: np.ndarray,
+                     values) -> None:
+        chunk = {"round": rounds_arr, "mask": np.asarray(mask, bool),
+                 "values": values}
+        if self.eval_history is None:
+            self.eval_history = chunk
+        else:
+            self.eval_history = jax.tree_util.tree_map(
+                lambda a, b: np.concatenate([a, b]), self.eval_history, chunk)
+
     def _train_engine(self, rounds: int, log_every: int = 0) -> List[Dict]:
         s = self.state
         runner = (self.engine.run if self.backend == "engine"
@@ -139,14 +181,18 @@ class FederatedTrainer:
         while done < rounds:
             # chunk by log_every so progress lines appear while training
             k = min(log_every or rounds, rounds - done)
+            start = s.round_idx
             self._estate, hist = runner(self._estate, k)
+            if "eval" in hist:
+                self._append_eval(np.arange(start + 1, start + k + 1),
+                                  hist["eval_mask"], hist["eval"])
             for i in range(k):
                 s.round_idx += 1
                 rec = {"round": s.round_idx, "loss": float(hist["loss"][i]),
                        "mean_update_norm":
                            float(hist["mean_update_norm"][i]),
                        "frac_clipped": float(hist["frac_clipped"][i]),
-                       "n_clients": int(self.engine.cohort),
+                       "n_clients": int(hist["n_clients"][i]),
                        "noise_std": float(hist["noise_std"][i])}
                 s.history.append(rec)
                 recs.append(rec)
@@ -159,7 +205,7 @@ class FederatedTrainer:
         # mirror device population state back into the host PopulationSim so
         # post-hoc analyses (participation, Pace-Steering recency) see it
         self.participation = np.asarray(self._estate.participation, np.int64)
-        self.pop._last_round = np.asarray(self._estate.last_round, np.int64)
+        self.pop.absorb_last_round(np.asarray(self._estate.last_round))
         return recs
 
     # ---------------------------------------------------------------- public

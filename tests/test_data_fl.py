@@ -8,7 +8,7 @@ from repro.data.corpus import BigramCorpus
 from repro.data.federated import FederatedDataset, USER_SENTENCES
 from repro.data.ngram import KatzTrigramLM, recall_at_k
 from repro.data.tokenizer import PAD, Tokenizer
-from repro.fl.population import PopulationSim
+from repro.fl.population import PopulationSim, participation_rates
 from repro.fl.sampling import fixed_size_sample, poisson_sample, sample_round
 
 import jax
@@ -90,6 +90,61 @@ def test_to_device_arrays_packing(corpus):
         assert all(tuple(r) in real for r in data["examples"][i])
 
 
+def test_inject_canaries_rejects_shared_prefixes(corpus):
+    """Hand-built canaries sharing a beam-search prefix are rejected —
+    extraction would be ill-defined (make_canaries never produces them)."""
+    ds = FederatedDataset(corpus, n_users=4, seq_len=16)
+    from repro.core.secret_sharer import Canary
+    a = Canary((1, 2, 3, 4, 5), 1, 1)
+    b = Canary((1, 2, 9, 9, 9), 1, 1)   # same (1, 2) prefix
+    with pytest.raises(ValueError, match="prefix"):
+        ds.inject_canaries([a, b])
+
+
+def test_canaries_accessor_order(corpus):
+    ds = FederatedDataset(corpus, n_users=4, seq_len=16)
+    cans = make_canaries(jax.random.PRNGKey(1), vocab=VOCAB,
+                         grid=[(2, 3), (1, 5)], per_config=2)
+    ds.inject_canaries(cans)
+    assert ds.canaries() == cans
+
+
+def test_canaries_survive_device_packing(corpus):
+    """inject_canaries → to_device_arrays → engine gather: the injected
+    tokens must come out of the padded corpus tensor and appear in the
+    gathered client batches."""
+    import jax.numpy as jnp
+    from repro.core.secret_sharer import Canary
+    from repro.fl.engine import gather_client_batches
+
+    ds = FederatedDataset(corpus, n_users=6, seq_len=16,
+                          sentences_per_user=5)
+    full = Canary((11, 22, 33, 44, 55), 1, 200)   # all 200 examples = canary
+    part = Canary((66, 77, 88, 99, 12), 1, 7)     # 7 canary + 193 public
+    ds.inject_canaries([full, part])
+    data = ds.to_device_arrays()
+    uid_full, uid_part = 6, 7
+    assert data["synthetic"][uid_full] and data["synthetic"][uid_part]
+
+    row = list(full.tokens) + [PAD] * (17 - 5)
+    assert all(list(r) == row for r in data["examples"][uid_full])
+    part_rows = [list(r[:5]) for r in data["examples"][uid_part]]
+    assert part_rows.count(list(part.tokens)) == 7
+
+    batch = gather_client_batches(jnp.asarray(data["examples"]),
+                                  jnp.asarray(data["counts"]),
+                                  jnp.asarray([uid_full]),
+                                  jax.random.PRNGKey(0),
+                                  n_batches=2, batch_size=4)
+    toks = np.asarray(batch["tokens"]).reshape(-1, 16)
+    assert np.all(toks[:, :5] == np.asarray(full.tokens))
+    labels = np.asarray(batch["labels"]).reshape(-1, 16)
+    mask = np.asarray(batch["mask"]).reshape(-1, 16)
+    # labels under the mask are the canary continuation, PAD masked out
+    assert np.all(labels[:, :4] == np.asarray(full.tokens[1:]))
+    assert np.all(mask[:, :4] == 1.0) and np.all(mask[:, 4:] == 0.0)
+
+
 def test_ngram_beats_unigram(corpus):
     train = corpus.sample_sentences(3000, seed=2)
     test = corpus.sample_sentences(300, seed=3)
@@ -132,6 +187,12 @@ def test_pace_steering_suppresses_repeats():
     real_rate = part[:1990].mean()
     synth_rate = part[1990:].mean()
     assert synth_rate > 10 * real_rate
+    # the shared helper computes the same per-round rates (Table 3)
+    mask = np.zeros(n, bool)
+    mask[synth] = True
+    s, r = participation_rates(part, mask, 120)
+    assert s == pytest.approx(synth_rate / 120)
+    assert r == pytest.approx(real_rate / 120)
 
 
 def test_synthetic_always_checked_in():

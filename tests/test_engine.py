@@ -85,7 +85,8 @@ def test_trajectory_parity_and_participation(setup):
     assert _max_leaf_diff(sa.params, sb.params) < 1e-4
     # history schema + σ = z·S/qN actually applied every round
     assert set(ha) == {"loss", "mean_update_norm", "frac_clipped",
-                       "noise_std"}
+                       "noise_std", "n_clients"}
+    np.testing.assert_array_equal(ha["n_clients"], 12)
     np.testing.assert_allclose(ha["noise_std"], 0.3 * 0.8 / 12, rtol=1e-6)
     assert np.all(np.isfinite(ha["loss"]))
 
@@ -121,6 +122,33 @@ def test_trainer_backends_parity(setup):
                - hists["host"].state.history[-1]["loss"]) < 1.0
 
 
+def test_trainer_poisson_backends(setup):
+    """FederatedTrainer(sampling="poisson") works on both backends: host
+    rounds shrink/grow with the draw, the engine's history reports realized
+    sizes, σ is constant at z·S/qN, and the accountant gets the matching
+    subsampling bound."""
+    _, model, _, ds = setup
+    dp = DPConfig(clients_per_round=12, noise_multiplier=0.3, clip_norm=0.8,
+                  server_opt="momentum", server_lr=0.5, server_momentum=0.9,
+                  sampling="poisson")
+    cl = ClientConfig(local_epochs=1, batch_size=10, lr=0.3)
+    sizes = {}
+    for backend in ("engine", "host"):
+        pop = PopulationSim(len(ds.users), availability=1.0, seed=0)
+        tr = FederatedTrainer(model, ds, dp, cl, pop=pop, n_local_batches=2,
+                              seed=0, backend=backend, rounds_per_call=3)
+        assert tr.accountant.sampling == "poisson"
+        tr.train(3)
+        recs = tr.state.history
+        assert all(np.isfinite(r["loss"]) for r in recs)
+        np.testing.assert_allclose([r["noise_std"] for r in recs],
+                                   0.3 * 0.8 / 12, rtol=1e-6)
+        sizes[backend] = [r["n_clients"] for r in recs]
+        assert int(tr.participation.sum()) == sum(sizes[backend])
+    # Bernoulli(q) round composition: realized sizes are not the constant qN
+    assert any(n != 12 for n in sizes["engine"] + sizes["host"])
+
+
 def test_engine_pace_steering_suppresses_repeats(setup):
     """With full availability and a long cooldown, a cohort participating in
     round r is (almost surely) excluded for the following rounds."""
@@ -135,6 +163,93 @@ def test_engine_pace_steering_suppresses_repeats(setup):
     # 4 rounds × 12 distinct clients: nobody repeats while cooling down
     assert int(np.asarray(s.participation).max()) == 1
     assert int(np.asarray(s.participation).sum()) == 4 * 12
+
+
+def test_eval_hook_masking_and_parity(setup):
+    """eval_fn runs inside the scan on post-update params every eval_every
+    rounds; other rounds carry zeros, and the compiled scan and the
+    per-round-jit reference produce identical stacked outputs."""
+    _, model, _, ds = setup
+
+    def eval_fn(params, round_idx):
+        flat = jnp.concatenate([jnp.ravel(l) for l in
+                                jax.tree_util.tree_leaves(params)])
+        return {"pnorm": jnp.linalg.norm(flat),
+                "round": round_idx.astype(jnp.int32)}
+
+    dp = DPConfig(clients_per_round=12, noise_multiplier=0.3, clip_norm=0.8,
+                  server_opt="momentum", server_lr=0.5, server_momentum=0.9)
+    cl = ClientConfig(local_epochs=1, batch_size=10, lr=0.3)
+    eng = SimEngine(model, ds.to_device_arrays(), dp, cl, n_local_batches=2,
+                    availability=0.5, rounds_per_call=4,
+                    eval_fn=eval_fn, eval_every=3)
+    sa, ha = eng.run(_init(eng, model), 6)
+    sb, hb = eng.run_python(_init(eng, model), 6)
+    # mask: rounds 3 and 6 (1-indexed) are evaluated
+    np.testing.assert_array_equal(
+        ha["eval_mask"], [False, False, True, False, False, True])
+    np.testing.assert_array_equal(ha["eval_mask"], hb["eval_mask"])
+    np.testing.assert_allclose(ha["eval"]["pnorm"], hb["eval"]["pnorm"],
+                               rtol=1e-6)
+    # masked rounds carry zeros; evaluated rounds a real (positive) norm
+    assert np.all(ha["eval"]["pnorm"][~ha["eval_mask"]] == 0.0)
+    assert np.all(ha["eval"]["pnorm"][ha["eval_mask"]] > 0.0)
+    # eval_fn sees the 0-based index of the round it closes
+    np.testing.assert_array_equal(ha["eval"]["round"], [0, 0, 2, 0, 0, 5])
+
+
+def test_in_scan_canary_hook_matches_posthoc_scoring(setup):
+    """Zero noise: the in-scan canary log-perplexity hook must equal host
+    post-hoc scoring of the final params bit-exactly (the engine is the
+    measurement substrate, not an approximation of it)."""
+    from repro.core.secret_sharer import (canary_eval_fn, canary_matrix,
+                                          log_perplexity, make_canaries)
+    _, model, _, ds = setup
+    canaries = make_canaries(jax.random.PRNGKey(5), vocab=VOCAB,
+                             grid=[(1, 4), (2, 6)], per_config=1)
+    ds_c = FederatedDataset(ds.corpus, n_users=40, seq_len=16,
+                            sentences_per_user=20)
+    ds_c.inject_canaries(canaries)
+    dp = DPConfig(clients_per_round=10, noise_multiplier=0.0, clip_norm=0.8,
+                  server_opt="momentum", server_lr=0.5, server_momentum=0.9)
+    cl = ClientConfig(local_epochs=1, batch_size=10, lr=0.3)
+    eng = SimEngine(model, ds_c.to_device_arrays(), dp, cl,
+                    n_local_batches=2, availability=0.5, rounds_per_call=2,
+                    eval_fn=canary_eval_fn(model, canaries), eval_every=2)
+    s, h = eng.run(_init(eng, model), 4)
+    post = log_perplexity(model, s.params, canary_matrix(canaries),
+                          batch_size=len(canaries))
+    np.testing.assert_array_equal(h["eval"]["canary_logppl"][-1], post)
+    # unevaluated rounds are masked out
+    np.testing.assert_array_equal(h["eval_mask"], [False, True, False, True])
+
+
+def test_poisson_rounds(setup):
+    """sampling="poisson": variable-size rounds via the Bernoulli mask —
+    scan/per-round parity, realized sizes around qN with σ still calibrated
+    to the expected round size, and participation counts consistent with
+    the per-round sizes."""
+    _, model, _, ds = setup
+    dp = DPConfig(clients_per_round=12, noise_multiplier=0.3, clip_norm=0.8,
+                  server_opt="momentum", server_lr=0.5, server_momentum=0.9,
+                  sampling="poisson")
+    cl = ClientConfig(local_epochs=1, batch_size=10, lr=0.3)
+    eng = SimEngine(model, ds.to_device_arrays(), dp, cl, n_local_batches=2,
+                    availability=1.0, rounds_per_call=4)
+    assert eng.sampling == "poisson"        # picked up from DPConfig
+    sa, ha = eng.run(_init(eng, model), ROUNDS)
+    sb, hb = eng.run_python(_init(eng, model), ROUNDS)
+    np.testing.assert_allclose(ha["loss"], hb["loss"], rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(ha["n_clients"], hb["n_clients"])
+    np.testing.assert_array_equal(np.asarray(sa.participation),
+                                  np.asarray(sb.participation))
+    # round sizes vary around qN·availability but stay within the buffer
+    assert len(set(ha["n_clients"].tolist())) > 1
+    assert np.all(ha["n_clients"] <= eng.buffer)
+    assert int(np.asarray(sa.participation).sum()) == int(
+        ha["n_clients"].sum())
+    # σ = z·S/qN against the *expected* round size, not the realized one
+    np.testing.assert_allclose(ha["noise_std"], 0.3 * 0.8 / 12, rtol=1e-6)
 
 
 def test_engine_weight_hook_override(setup):

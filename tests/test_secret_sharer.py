@@ -6,9 +6,11 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
-from repro.core.secret_sharer import (Canary, beam_search, canary_extracted,
+from repro.core.secret_sharer import (PREFIX_LEN, Canary, beam_search,
+                                      canary_extracted, canary_matrix,
                                       log_perplexity, make_canaries,
-                                      random_sampling_rank)
+                                      random_sampling_rank,
+                                      random_sampling_ranks, score_canaries)
 from repro.models import build
 
 VOCAB = 256
@@ -43,6 +45,37 @@ def test_make_canaries_grid():
          (16, 1), (16, 14), (16, 200)])
 
 
+def test_make_canaries_prefixes_never_collide():
+    """Two canaries sharing a beam-search prefix would make per-canary
+    extraction ill-defined — draws are rejected/redrawn. Tiny vocab forces
+    actual collisions, so the redraw path is exercised."""
+    cs = make_canaries(jax.random.PRNGKey(0), vocab=3,
+                       grid=[(1, 1)], per_config=8)
+    prefixes = [c.prefix for c in cs]
+    assert len(set(prefixes)) == len(prefixes) == 8
+    assert all(0 <= t < 3 for c in cs for t in c.tokens)
+
+
+def test_make_canaries_impossible_grid_raises():
+    with pytest.raises(ValueError, match="distinct"):
+        make_canaries(jax.random.PRNGKey(0), vocab=3,
+                      grid=[(1, 1)], per_config=10)  # only 9 prefixes exist
+
+
+def test_score_canaries_matches_log_perplexity(tiny_model):
+    """The vmapped in-scan kernel and the chunked host scorer are the same
+    computation."""
+    cfg, model, params = tiny_model
+    cs = make_canaries(jax.random.PRNGKey(2), vocab=VOCAB,
+                       grid=[(1, 1), (4, 14)], per_config=2)
+    toks = canary_matrix(cs)
+    batched = np.asarray(jax.jit(
+        lambda p, t: score_canaries(model, p, t))(params, toks))
+    looped = log_perplexity(model, params, toks, batch_size=toks.shape[0])
+    np.testing.assert_allclose(batched, looped, rtol=1e-6)
+    assert batched.shape == (len(cs),)
+
+
 def test_log_perplexity_orders_memorized(tiny_model):
     cfg, model, params = tiny_model
     canary = Canary((5, 9, 13, 17, 21), 1, 1)
@@ -64,6 +97,24 @@ def test_random_sampling_rank_separates(tiny_model):
                                     n_samples=2000, batch_size=500)
     assert rank_mem < 10
     assert rank_clean > 100
+
+
+def test_random_sampling_ranks_batched_orders(tiny_model):
+    """Batched multi-canary ranking: the memorized canary ranks far below
+    the unseen one against the same shared continuation pool, and the
+    single-canary wrapper agrees with the batched kernel."""
+    cfg, model, params = tiny_model
+    memorized = Canary((5, 9, 13, 17, 21), 1, 1)
+    unseen = Canary((7, 11, 15, 19, 23), 1, 1)
+    trained = _memorize(model, params, memorized)
+    key = jax.random.PRNGKey(3)
+    ranks = random_sampling_ranks(model, trained, [memorized, unseen], key,
+                                  n_samples=2000, batch_size=500)
+    assert ranks.shape == (2,)
+    assert ranks[0] < 10
+    assert ranks[1] > 100
+    assert random_sampling_rank(model, trained, memorized, key,
+                                n_samples=2000, batch_size=500) == ranks[0]
 
 
 def test_beam_search_extracts_memorized(tiny_model):
