@@ -18,6 +18,12 @@ Two host baselines are reported:
   exactly qN: one compile, steady state; isolates the engine's win from
   per-round dispatch/stacking/donation alone.
 
+The sharded sweep additionally reports rounds/sec for every shard count in
+``--shards`` that the visible device count supports (engine backend,
+``num_shards=S``): on CPU run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to exercise the
+whole {1, 2, 4, 8} grid.
+
     PYTHONPATH=src python benchmarks/bench_sim_engine.py [--dry-run]
 
 ``--dry-run`` shrinks cohorts/rounds to a seconds-long CI smoke.
@@ -26,6 +32,8 @@ from __future__ import annotations
 
 import argparse
 import time
+
+import jax
 
 from benchmarks.common import emit
 from repro.configs import ClientConfig, DPConfig, get_config
@@ -57,10 +65,17 @@ def _rounds_per_sec(tr: FederatedTrainer, warmup: int, rounds: int) -> float:
     return rounds / (time.perf_counter() - t0)
 
 
-def run(dry_run: bool = False):
+def run(dry_run: bool = False, shards=(1, 2, 4, 8)):
     cohorts = [8] if dry_run else [50, 200, 1000]
     host_rounds = 2 if dry_run else 5
     eng_rounds = 4 if dry_run else 40
+    n_dev = len(jax.devices())
+    shard_counts = [s for s in shards if s <= n_dev]
+    skipped = [s for s in shards if s > n_dev]
+    if skipped:
+        print(f"bench_sim_engine: skipping shard counts {skipped} "
+              f"(only {n_dev} devices visible; set XLA_FLAGS="
+              f"--xla_force_host_platform_device_count={max(shards)})")
     results = {}
     for cohort in cohorts:
         n_users = max(6 * cohort, 50)
@@ -98,6 +113,29 @@ def run(dry_run: bool = False):
              f"rounds_per_sec={eng_rps:.3f};speedup_vs_host={speedup:.2f}x;"
              f"speedup_vs_fixed_cohort_host={eng_rps / fix_rps:.2f}x")
         results[cohort] = (host_rps, eng_rps, speedup)
+
+        # sharded cohort axis: rounds/sec per shard count. num_shards=1 IS
+        # the `eng` run above (the canonical-reduction engine without
+        # shard_map), so reuse its measurement instead of re-benchmarking.
+        if 1 in shard_counts:
+            emit(f"sim_engine/sharded/cohort={cohort}/shards=1",
+                 1e6 / eng_rps, f"rounds_per_sec={eng_rps:.3f};"
+                 "vs_unsharded=1.00x")
+            results[(cohort, 1)] = eng_rps
+        for s in (c for c in shard_counts if c > 1):
+            sh = FederatedTrainer(model, ds, dp, cl,
+                                  pop=PopulationSim(n_users,
+                                                    availability=0.5,
+                                                    seed=0),
+                                  n_local_batches=2, seed=0,
+                                  backend="engine", num_shards=s,
+                                  rounds_per_call=min(20, eng_rounds))
+            sh_rps = _rounds_per_sec(sh, min(20, eng_rounds), eng_rounds)
+            emit(f"sim_engine/sharded/cohort={cohort}/shards={s}",
+                 1e6 / sh_rps,
+                 f"rounds_per_sec={sh_rps:.3f};"
+                 f"vs_unsharded={sh_rps / eng_rps:.2f}x")
+            results[(cohort, s)] = sh_rps
     return results
 
 
@@ -105,5 +143,9 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--dry-run", action="store_true",
                     help="tiny cohort/rounds smoke for CI")
+    ap.add_argument("--shards", default="1,2,4,8",
+                    help="comma-separated shard counts to sweep (counts "
+                         "above the visible device count are skipped)")
     args = ap.parse_args()
-    run(dry_run=args.dry_run)
+    run(dry_run=args.dry_run,
+        shards=tuple(int(s) for s in args.shards.split(",") if s))

@@ -50,6 +50,19 @@ def user_update(model: Model, params0, batches, client: ClientConfig,
     return clipped, norm, was_clipped, loss
 
 
+def client_updates(model: Model, params, stacked_batches,
+                   client: ClientConfig, dp: DPConfig):
+    """Per-client :func:`user_update` vmapped over the stacked cohort —
+    *unreduced*: (clipped Δ stack (C, …), norms (C,), was_clipped (C,),
+    losses (C,)). The sharded simulation engine calls this per cohort shard
+    and does its own topology-invariant reduction (`repro.fl.engine`);
+    :func:`round_compute` is the single-host reduce-in-place wrapper."""
+    def one(batches):
+        return user_update(model, params, batches, client, dp)
+
+    return jax.vmap(one)(stacked_batches)
+
+
 def round_compute(model: Model, params, stacked_batches,
                   client: ClientConfig, dp: DPConfig, mask=None):
     """Pure round body: (params, stacked client batches (C, nb, B, S)) →
@@ -60,13 +73,12 @@ def round_compute(model: Model, params, stacked_batches,
     cohort buffer and zero out the unselected slots here, so the clipped sum
     and the per-round stats only see the clients that actually participated.
 
-    Traceable — the simulation engine inlines this into its scan body;
-    :func:`make_round_fn` wraps it in jit for the per-round host loop.
+    Traceable — :func:`make_round_fn` wraps it in jit for the per-round host
+    loop; the simulation engine uses :func:`client_updates` + its own
+    shard-count-invariant reduction instead.
     """
-    def one(batches):
-        return user_update(model, params, batches, client, dp)
-
-    clipped, norms, flags, losses = jax.vmap(one)(stacked_batches)
+    clipped, norms, flags, losses = client_updates(model, params,
+                                                   stacked_batches, client, dp)
     if mask is None:
         total = jax.tree_util.tree_map(lambda l: jnp.sum(l, axis=0), clipped)
         return total, jnp.mean(norms), jnp.mean(flags), jnp.mean(losses)

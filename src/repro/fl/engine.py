@@ -1,4 +1,4 @@
-"""Compiled multi-round DP-FedAvg simulation engine.
+"""Compiled multi-round DP-FedAvg simulation engine (cohort-sharded).
 
 The host-loop trainer (`repro.fl.round.FederatedTrainer`, backend="host")
 re-stacks client tensors with numpy and re-enters jit every round; at
@@ -18,21 +18,48 @@ a single ``lax.scan``:
   corpus tensor built by ``FederatedDataset.to_device_arrays()``; no host
   data movement after engine construction;
 * **round** — the clip → sum → noise → server-optimizer (Nesterov) step of
-  Algorithm 1 fused into the scan body (`repro.fl.client.round_compute` +
+  Algorithm 1 fused into the scan body (`repro.fl.client.client_updates` +
   `repro.core.dp_fedavg.finalize_round`), with state buffers donated across
   calls;
 * **eval hooks** — a user-supplied ``eval_fn(params, round_idx) -> pytree``
   evaluated *inside* the scan body every ``eval_every`` rounds (a masked
   ``lax.cond`` skips the computation on the other rounds), with stacked
-  per-round outputs returned in the history next to the training metrics.
-  This is what makes memorization-vs-round curves (in-scan canary
-  log-perplexity, paper Fig. style) practical at thousands of rounds;
+  per-round outputs returned in the history next to the training metrics;
 * **Poisson rounds** — ``sampling="poisson"`` draws each available device
   i.i.d. Bernoulli(q = qN/N) per round [MRTZ17]. Rounds are variable-size
   but shapes stay static: the first ``poisson_buffer`` selected devices fill
   a fixed-shape cohort buffer and a 0/1 slot mask is folded into the
-  weighted sum (`round_compute(mask=...)`); Δ̄ and σ keep the DPConfig
-  calibration z·S/(qN) against the *expected* round size.
+  clipped sum; Δ̄ and σ keep the DPConfig calibration z·S/(qN) against the
+  *expected* round size.
+
+Cohort sharding (``num_shards > 1``)
+------------------------------------
+
+The per-round cohort axis shards across a 1-D ``data`` mesh with
+``shard_map`` (`sharding.specs.sim_mesh_config` / `launch.mesh.
+make_cohort_mesh`): client batching and the per-client clip live per-shard,
+and a single collective reduction produces the global clipped sum before
+the (replicated) noise/Nesterov server step. Cohort sampling and the
+Poisson draw stay replicated — every shard sees the same PRNG stream, so
+all shards agree on the cohort and noise is drawn once (σ calibration is
+untouched by the shard count).
+
+Because float addition is not associative, a naive per-shard partial sum +
+``psum`` would make params drift with the shard count. Instead the engine
+reduces through a **canonical block tree** (:func:`cohort_sum`): the padded
+cohort buffer is split into :data:`CANON_BLOCKS` contiguous blocks whose
+boundaries align with every supported shard boundary, each block is summed
+locally, and the block partials are combined by a fixed pairwise tree
+(shards ``all_gather`` the partials so the tree is evaluated identically
+everywhere). The result is *bit-identical for every shard count dividing*
+:data:`CANON_BLOCKS` — `tests/test_engine_sharded.py` asserts zero-noise
+bit-exact trajectory parity across shards {1, 2, 4, 8} — which is exactly
+the property the DP analysis needs: the clipped-sum sensitivity bound
+S/(qN) survives unchanged under any aggregation topology [MRTZ17].
+
+Cohort / buffer sizes that don't divide the shard count are **padded**
+(masked empty slots), never truncated — dropping devices would silently
+shrink the round and break the σ = zS/(qN) calibration.
 
 `run` (compiled scan) and `run_python` (per-round jit, Python loop) execute
 the *same* traced round body from the same PRNG stream, so they sample
@@ -47,12 +74,25 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ClientConfig, DPConfig
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ClientConfig, DPConfig, MeshConfig
 from repro.core.dp_fedavg import finalize_round, server_step
 from repro.core.server_optim import ServerOptState, init_state
 from repro.data.tokenizer import PAD
-from repro.fl.client import round_compute
+from repro.fl.client import client_updates
+from repro.launch.mesh import make_cohort_mesh
 from repro.models.api import Model
+from repro.sharding.specs import (batch_axis_size, cohort_spec,
+                                  sim_mesh_config)
+from repro.utils.compat import shard_map
+
+# Canonical block count of the topology-invariant cohort reduction: results
+# are bit-identical across every shard count dividing this. 8 covers the
+# power-of-two shard counts the CI matrix exercises; a non-dividing
+# num_shards still works (blocks are padded up) but is only bit-stable
+# against itself.
+CANON_BLOCKS = 8
 
 
 class EngineState(NamedTuple):
@@ -114,22 +154,92 @@ def poisson_select(key, q: float, available, buffer: int):
     return ids, slot_mask, took
 
 
-def gather_client_batches(examples, counts, ids, key,
+def gather_client_batches(examples, counts, ids, keys,
                           n_batches: int, batch_size: int):
     """Build the (C, n_batches, B, S) client batch stack by pure gathers from
     the padded corpus tensor — the device-side analogue of
     ``FederatedDataset.user_tensor`` (uniform-per-example via per-user
-    ``counts`` bounds; draws with replacement)."""
-    C = ids.shape[0]
+    ``counts`` bounds; draws with replacement).
+
+    ``keys`` is a (C,) stack of *per-slot* PRNG keys, split from the
+    replicated round stream *before* the cohort axis is sharded — so a
+    slot's example draw is independent of the shard count (bit-parity
+    across shards), though it does depend on the slot position. Anything
+    that re-packs or reorders buffer slots (e.g. per-shard compaction)
+    would therefore change the draws; keep slot assignment replicated."""
     need = n_batches * batch_size
-    idx = jax.random.randint(key, (C, need), 0, counts[ids][:, None])
-    emax = examples.shape[1]
-    flat = examples.reshape((-1, examples.shape[-1]))
-    rows = flat[ids[:, None] * emax + idx]              # (C, need, S+1)
-    rows = rows.reshape(C, n_batches, batch_size, -1)
+
+    def one(uid, key):
+        idx = jax.random.randint(key, (need,), 0, counts[uid])
+        return examples[uid][idx].reshape(n_batches, batch_size, -1)
+
+    rows = jax.vmap(one)(ids, keys)                      # (C, nb, B, S+1)
     batch = {"tokens": rows[..., :-1], "labels": rows[..., 1:]}
     batch["mask"] = (batch["labels"] != PAD).astype(jnp.float32)
     return batch
+
+
+# ---------------------------------------------------------------- reduction
+
+
+def _block_sums(a, n_blocks: int):
+    """Sum contiguous equal blocks of the leading axis → (n_blocks, ...)."""
+    blk = a.shape[0] // n_blocks
+    return a.reshape((n_blocks, blk) + a.shape[1:]).sum(axis=1)
+
+
+def _fold_blocks(a):
+    """Fixed pairwise-adjacent tree combine over the leading axis."""
+    while a.shape[0] > 1:
+        half = a.shape[0] // 2
+        c = a[0:2 * half:2] + a[1:2 * half:2]
+        if a.shape[0] % 2:
+            c = jnp.concatenate([c, a[-1:]], axis=0)
+        a = c
+    return a[0]
+
+
+def canon_pad(n: int, num_shards: int = 1) -> int:
+    """Smallest padded cohort-buffer size ≥ ``n`` whose canonical blocks
+    align with ``num_shards`` shard boundaries. For every shard count
+    dividing :data:`CANON_BLOCKS` the padded size (and hence the reduction
+    tree) is *identical*, which is what makes cross-shard-count parity
+    bit-exact."""
+    if num_shards < 1:
+        raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+    return -(-max(int(n), 1) // n_canon_blocks(num_shards)) \
+        * n_canon_blocks(num_shards)
+
+
+def n_canon_blocks(num_shards: int = 1) -> int:
+    """Block count of the canonical reduction: :data:`CANON_BLOCKS` whenever
+    the shard count divides it (the bit-parity regime); otherwise the next
+    multiple of ``num_shards`` so shard boundaries still land on blocks."""
+    if CANON_BLOCKS % num_shards == 0:
+        return CANON_BLOCKS
+    return num_shards * max(1, -(-CANON_BLOCKS // num_shards))
+
+
+def cohort_sum(tree, mask, n_blocks: int = CANON_BLOCKS):
+    """Topology-invariant masked sum over a stacked cohort pytree.
+
+    ``tree`` has a leading cohort axis, ``mask`` is the (C,) 0/1 slot mask.
+    Masked slots contribute *exactly* zero (0·x = 0 and x + 0 = x are exact
+    in IEEE float), and the reduction runs block-local sums followed by a
+    fixed pairwise tree over the blocks — the same association no matter how
+    the cohort axis is later sharded, so the DP sensitivity of the sum to
+    any single slot is the same under every aggregation topology."""
+    m = mask.astype(jnp.float32)
+    pad = -(-m.shape[0] // n_blocks) * n_blocks - m.shape[0]
+
+    def one(l):
+        lm = l.astype(jnp.float32) * m.reshape((-1,) + (1,) * (l.ndim - 1))
+        if pad:
+            lm = jnp.concatenate(
+                [lm, jnp.zeros((pad,) + lm.shape[1:], lm.dtype)], axis=0)
+        return _fold_blocks(_block_sums(lm, n_blocks))
+
+    return jax.tree_util.tree_map(one, tree)
 
 
 class SimEngine:
@@ -146,6 +256,14 @@ class SimEngine:
     apply — inclusion probability is uniform, matching the host
     ``sample_round(scheme="poisson")`` reference).
 
+    ``num_shards`` (or an explicit 1-D ``mesh_config``, see
+    `sharding.specs.sim_mesh_config`) shards the cohort axis across that
+    many devices with ``shard_map`` — sampling, noise, and the server step
+    stay replicated; only client batching + local training + clipping are
+    per-shard, combined by the canonical reduction (:func:`cohort_sum`
+    association). Needs ≥ ``num_shards`` visible devices (on CPU force them
+    with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``).
+
     ``eval_fn(params, round_idx) -> pytree`` runs inside the scan on the
     *post-update* params after rounds ``eval_every, 2·eval_every, …``; other
     rounds carry zeros (see history keys ``eval`` / ``eval_mask``).
@@ -159,6 +277,8 @@ class SimEngine:
                  weight_fn: Optional[Callable] = None,
                  sampling: Optional[str] = None,
                  poisson_buffer: Optional[int] = None,
+                 num_shards: int = 1,
+                 mesh_config: Optional[MeshConfig] = None,
                  eval_fn: Optional[Callable] = None, eval_every: int = 1):
         self.model = model
         self.dp = dp
@@ -170,6 +290,27 @@ class SimEngine:
         if self.sampling not in ("fixed", "poisson"):
             raise ValueError(f"sampling must be 'fixed' or 'poisson', "
                              f"got {self.sampling!r}")
+        if mesh_config is not None:
+            if len(mesh_config.shape) != 1:
+                raise ValueError(
+                    "SimEngine shards the cohort over a 1-D mesh; got "
+                    f"{mesh_config}. Multi-pod / model-parallel topologies "
+                    "are the launch layer's job (see ROADMAP) — pass "
+                    "sim_mesh_config(num_shards) or just num_shards.")
+            from_mesh = batch_axis_size(mesh_config)
+            if num_shards not in (1, from_mesh):
+                raise ValueError(
+                    f"num_shards={num_shards} disagrees with mesh_config's "
+                    f"batch axes ({from_mesh} devices); pass one or the "
+                    "other")
+            num_shards = from_mesh
+        self.num_shards = int(num_shards)
+        self._mesh_config = sim_mesh_config(self.num_shards)
+        # the cohort axis shards over exactly the batch_axes of the mesh
+        # config — same layout rule as the production client dimension
+        self._cohort_pspec = cohort_spec(self._mesh_config)
+        self.mesh = (make_cohort_mesh(self._mesh_config)
+                     if self.num_shards > 1 else None)
         self.eval_fn = eval_fn
         self.eval_every = max(int(eval_every), 1)
         self.examples = jnp.asarray(data["examples"])
@@ -181,7 +322,10 @@ class SimEngine:
         if self.sampling == "poisson":
             buf = poisson_buffer or int(np.ceil(
                 self.cohort + 4.0 * np.sqrt(self.cohort) + 4))
-            self.buffer = min(self.n_users, buf)
+            # pad, never truncate: a buffer that doesn't divide the shard
+            # count grows to the next canonical multiple (masked empty
+            # slots) so no selected device is silently dropped
+            self.buffer = canon_pad(min(self.n_users, buf), self.num_shards)
             if self.buffer < self.cohort + 2 * np.sqrt(self.cohort) \
                     and self.buffer < self.n_users:
                 import warnings
@@ -193,6 +337,17 @@ class SimEngine:
                     stacklevel=2)
         else:
             self.buffer = self.cohort
+        # the physical per-round buffer: cohort/poisson slots padded to the
+        # canonical block grid (slot_mask zeroes the padding exactly)
+        self.padded = (self.buffer if self.sampling == "poisson"
+                       else canon_pad(self.cohort, self.num_shards))
+        self.n_blocks = n_canon_blocks(self.num_shards)
+        if self.padded % self.num_shards or self.padded % self.n_blocks:
+            raise AssertionError(
+                f"SimEngine internal error: padded cohort buffer "
+                f"{self.padded} must be divisible by num_shards="
+                f"{self.num_shards} and n_blocks={self.n_blocks} — padding "
+                "must never truncate devices (ragged cohorts pad up)")
         n_synth = int(np.asarray(data["synthetic"]).sum())
         expected_avail = availability * (self.n_users - n_synth) + n_synth
         if self.sampling == "fixed" and expected_avail < self.cohort:
@@ -227,15 +382,71 @@ class SimEngine:
 
     def init_state(self, params, seed: int = 0,
                    opt_state: Optional[ServerOptState] = None) -> EngineState:
-        return EngineState(
+        state = EngineState(
             params=params,
             opt_state=opt_state if opt_state is not None else init_state(params),
             key=jax.random.PRNGKey(seed),
             last_round=jnp.full((self.n_users,), -(10 ** 9), jnp.int32),
             participation=jnp.zeros((self.n_users,), jnp.int32),
             round_idx=jnp.zeros((), jnp.int32))
+        if self.mesh is not None:
+            # commit replicated across the cohort mesh so the donated scan
+            # carry keeps one stable layout (no resharding between chunks)
+            state = jax.device_put(state, NamedSharding(self.mesh, P()))
+        return state
 
     # ------------------------------------------------------------- round body
+
+    def _local_block_sums(self, params, ids, keys, slot_mask, n_blocks: int):
+        """Per-shard slice of the round: gather → local SGD → clip → masked
+        canonical block partial sums. Returns (update-block pytree with a
+        leading (n_blocks,) axis, (n_blocks, 4) stat blocks packing
+        [Σ norms, Σ clipped-flags, Σ losses, Σ mask])."""
+        batches = gather_client_batches(self.examples, self.counts, ids,
+                                        keys, self.n_local_batches,
+                                        self.client.batch_size)
+        clipped, norms, flags, losses = client_updates(
+            self.model, params, batches, self.client, self.dp)
+        m = slot_mask.astype(jnp.float32)
+        tree = jax.tree_util.tree_map(
+            lambda l: _block_sums(
+                l.astype(jnp.float32) * m.reshape((-1,) + (1,) * (l.ndim - 1)),
+                n_blocks),
+            clipped)
+        scal = _block_sums(jnp.stack([norms * m, flags * m, losses * m, m],
+                                     axis=-1), n_blocks)
+        return tree, scal
+
+    def _cohort_sums(self, params, ids, keys, slot_mask):
+        """Global masked clipped sum + stat sums over the padded cohort
+        buffer — per-shard compute under ``shard_map``, combined by the
+        canonical block tree so every shard count agrees bitwise."""
+        if self.num_shards == 1:
+            tree, scal = self._local_block_sums(params, ids, keys, slot_mask,
+                                                self.n_blocks)
+            return (jax.tree_util.tree_map(_fold_blocks, tree),
+                    _fold_blocks(scal))
+
+        cspec = self._cohort_pspec
+        axis = cspec[0]
+        nblk_local = self.n_blocks // self.num_shards
+
+        def body(params, ids, keys, slot_mask):
+            tree, scal = self._local_block_sums(params, ids, keys, slot_mask,
+                                                nblk_local)
+            # all_gather carries the raw block partials (no arithmetic), so
+            # the pairwise tree below is evaluated identically — and with
+            # the identical association — on every shard
+            gather = lambda l: jax.lax.all_gather(l, axis).reshape(
+                (self.n_blocks,) + l.shape[1:])
+            tree = jax.tree_util.tree_map(gather, tree)
+            return (jax.tree_util.tree_map(_fold_blocks, tree),
+                    _fold_blocks(gather(scal)))
+
+        sharded = shard_map(
+            body, mesh=self.mesh,
+            in_specs=(P(), cspec, cspec, cspec), out_specs=P())
+        return sharded(params, ids, keys, slot_mask)
 
     def _round_body(self, state: EngineState, _=None
                     ) -> Tuple[EngineState, Dict[str, jax.Array]]:
@@ -243,27 +454,32 @@ class SimEngine:
         avail = (jax.random.uniform(k_avail, (self.n_users,))
                  < self.availability) | self.synthetic
         if self.sampling == "poisson":
-            ids, mask, took = poisson_select(k_sample, self.q, avail,
-                                             self.buffer)
+            ids, slot_mask, took = poisson_select(k_sample, self.q, avail,
+                                                  self.padded)
             last_round = jnp.where(took, state.round_idx, state.last_round)
             participation = state.participation + took.astype(jnp.int32)
-            n_clients = jnp.sum(took).astype(jnp.int32)
         else:
             w = self.weight_fn(state.last_round, self.synthetic,
                                state.round_idx)
-            ids = sample_cohort(k_sample, w, avail, self.cohort)
-            mask = None
-            last_round = state.last_round.at[ids].set(state.round_idx)
-            participation = state.participation.at[ids].add(1)
-            n_clients = jnp.asarray(self.cohort, jnp.int32)
-        batches = gather_client_batches(self.examples, self.counts, ids,
-                                        k_idx, self.n_local_batches,
-                                        self.client.batch_size)
-        total, mean_norm, frac_clipped, loss = round_compute(
-            self.model, state.params, batches, self.client, self.dp,
-            mask=mask)
+            cohort_ids = sample_cohort(k_sample, w, avail, self.cohort)
+            ids = jnp.pad(cohort_ids, (0, self.padded - self.cohort))
+            slot_mask = jnp.arange(self.padded) < self.cohort
+            # padded slots alias device 0 — scatter through the mask so they
+            # never touch the population vectors
+            last_round = state.last_round.at[ids].max(
+                jnp.where(slot_mask, state.round_idx,
+                          jnp.int32(-(10 ** 9))))
+            participation = state.participation.at[ids].add(
+                slot_mask.astype(jnp.int32))
+        n_clients = jnp.sum(slot_mask).astype(jnp.int32)
+        keys = jax.random.split(k_idx, self.padded)
+        total, scal = self._cohort_sums(state.params, ids, keys, slot_mask)
+        denom = jnp.maximum(scal[3], 1.0)
+        mean_norm, frac_clipped, loss = (scal[0] / denom, scal[1] / denom,
+                                         scal[2] / denom)
         # Δ̄ and σ are calibrated against qN — the exact round size in fixed
-        # mode, the *expected* one under Poisson sampling [MRTZ17].
+        # mode, the *expected* one under Poisson sampling [MRTZ17]. The
+        # noise key is the replicated stream: one draw, every shard agrees.
         delta, stats = finalize_round(total, self.cohort, k_noise, self.dp,
                                       stats=(mean_norm, frac_clipped))
         params, opt_state = server_step(state.params, state.opt_state, delta,

@@ -15,8 +15,11 @@ distributed round is `repro.launch.steps.fed_train_step`. Three backends:
 ``sampling`` (default ``dp.sampling``) selects fixed-size rounds (Algorithm
 1) or Poisson-composed variable-size rounds on every backend; the accountant
 is constructed with the matching bound. Engine backends additionally accept
-an in-scan ``eval_fn(params, round_idx)`` hook (see `repro.fl.engine`),
-whose stacked outputs land in ``trainer.eval_history``.
+``num_shards`` (shard the per-round cohort axis across that many devices —
+trajectories are bit-identical across shard counts dividing
+`engine.CANON_BLOCKS`, see `repro.fl.engine`) and an in-scan
+``eval_fn(params, round_idx)`` hook, whose stacked outputs land in
+``trainer.eval_history``.
 """
 from __future__ import annotations
 
@@ -57,10 +60,14 @@ class FederatedTrainer:
                  pop: Optional[PopulationSim] = None, seed: int = 0,
                  n_local_batches: int = 4, backend: str = "host",
                  rounds_per_call: int = 8, sampling: Optional[str] = None,
-                 eval_fn=None, eval_every: int = 1):
+                 num_shards: int = 1, eval_fn=None, eval_every: int = 1):
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}, "
                              f"got {backend!r}")
+        if num_shards != 1 and backend == "host":
+            raise ValueError("num_shards is an engine-backend feature (the "
+                             "host loop stacks clients on one host); use "
+                             "backend='engine'")
         self.model = model
         self.dataset = dataset
         self.dp = dp
@@ -113,7 +120,7 @@ class FederatedTrainer:
                 pace_cooldown=self.pop.pace_cooldown,
                 pace_penalty=self.pop.pace_penalty,
                 rounds_per_call=rounds_per_call,
-                sampling=self.sampling,
+                sampling=self.sampling, num_shards=num_shards,
                 eval_fn=eval_fn, eval_every=eval_every)
             self._estate = self.engine.init_state(
                 params, seed=seed, opt_state=self.state.opt_state)

@@ -8,6 +8,8 @@ DP-FedAvg round reduction crosses the inter-pod links.
 """
 from __future__ import annotations
 
+import numpy as np
+
 import jax
 
 from repro.configs.base import MULTI_POD, SINGLE_POD, MeshConfig
@@ -21,3 +23,28 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 def mesh_config(*, multi_pod: bool = False) -> MeshConfig:
     return MULTI_POD if multi_pod else SINGLE_POD
+
+
+def make_cohort_mesh(mesh_cfg: MeshConfig):
+    """Concrete 1-D device mesh for the simulation engine's sharded cohort.
+
+    Takes the first ``n_devices`` local devices (CPU included — CI forces
+    8 host devices via ``XLA_FLAGS=--xla_force_host_platform_device_count=8``)
+    and lays them out over the mesh's single batch axis. The engine keeps its
+    mesh 1-D; the cross-pod reduction of the multi-pod production mesh is the
+    launch layer's job (see ROADMAP).
+    """
+    if len(mesh_cfg.shape) != 1:
+        raise ValueError(
+            "make_cohort_mesh expects a 1-D MeshConfig (the sim engine "
+            f"shards the cohort over a single axis); got {mesh_cfg}. Use "
+            "sharding.specs.sim_mesh_config(num_shards).")
+    n = mesh_cfg.n_devices
+    devices = jax.devices()
+    if len(devices) < n:
+        raise ValueError(
+            f"cohort mesh needs {n} devices but only {len(devices)} are "
+            "visible. On CPU, force host devices with XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n} (set it before "
+            "importing jax).")
+    return jax.sharding.Mesh(np.asarray(devices[:n]), mesh_cfg.axes)

@@ -52,6 +52,11 @@ def main():
                          "(repro.fl.engine); host = numpy reference loop")
     ap.add_argument("--rounds-per-call", type=int, default=10,
                     help="rounds fused per jit call (engine backend)")
+    ap.add_argument("--num-shards", type=int, default=1,
+                    help="shard the per-round cohort axis across this many "
+                         "devices (engine backend; on CPU force devices "
+                         "with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
     ap.add_argument("--availability", type=float, default=0.3,
                     help="per-round device check-in probability; keep "
                          "availability·n_users above clients_per_round")
@@ -87,7 +92,8 @@ def main():
                                        if u.is_synthetic], seed=args.seed)
     trainer = FederatedTrainer(model, ds, dp, cl, pop=pop, seed=args.seed,
                                n_local_batches=3, backend=args.backend,
-                               rounds_per_call=args.rounds_per_call)
+                               rounds_per_call=args.rounds_per_call,
+                               num_shards=args.num_shards)
     trainer.train(args.rounds, log_every=max(1, args.rounds // 20))
 
     eps = trainer.accountant.get_epsilon(1e-6)

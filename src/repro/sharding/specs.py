@@ -45,6 +45,24 @@ def batch_axis_size(mesh_cfg: MeshConfig) -> int:
     return n
 
 
+def sim_mesh_config(num_shards: int) -> MeshConfig:
+    """1-D mesh over the ``data`` axis for the simulation engine's sharded
+    cohort (`repro.fl.engine.SimEngine(num_shards=...)`). The cohort shards
+    over exactly the axes :func:`batch_axes` names — the same layout the
+    production `launch.steps.fed_train_step` uses for its client dimension —
+    so a sim-validated shard count carries over to the real mesh."""
+    if num_shards < 1:
+        raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+    return MeshConfig((num_shards,), ("data",))
+
+
+def cohort_spec(mesh_cfg: MeshConfig):
+    """PartitionSpec of the per-round cohort/client axis: sharded over
+    :func:`batch_axes` (``data``, plus ``pod`` on multi-pod meshes)."""
+    axes = batch_axes(mesh_cfg)
+    return P(axes[0] if len(axes) == 1 else axes)
+
+
 FSDP = "data"     # params FSDP-shard over data (replicated across pods)
 MP = "model"
 

@@ -53,3 +53,21 @@ def tpu_compiler_params(**kwargs):
     from jax.experimental.pallas import tpu as pltpu
     cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
     return cls(**kwargs)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_rep=False):
+    """``jax.shard_map`` (new) / ``jax.experimental.shard_map.shard_map`` (old).
+
+    ``check_rep`` defaults off: the engine's sharded round body closes over
+    replicated population constants, which old-JAX rep-checking rejects.
+    """
+    fn = getattr(jax, "shard_map", None)
+    if fn is not None:
+        try:
+            return fn(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=check_rep)
+        except TypeError:
+            return fn(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_rep)

@@ -134,7 +134,7 @@ def test_canaries_survive_device_packing(corpus):
     batch = gather_client_batches(jnp.asarray(data["examples"]),
                                   jnp.asarray(data["counts"]),
                                   jnp.asarray([uid_full]),
-                                  jax.random.PRNGKey(0),
+                                  jax.random.split(jax.random.PRNGKey(0), 1),
                                   n_batches=2, batch_size=4)
     toks = np.asarray(batch["tokens"]).reshape(-1, 16)
     assert np.all(toks[:, :5] == np.asarray(full.tokens))

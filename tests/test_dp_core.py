@@ -2,7 +2,11 @@
 
 Property-style invariants run over a fixed (scale, clip, seed) grid rather
 than hypothesis draws — deterministic, same coverage of the clipped /
-unclipped / extreme-scale branches.
+unclipped / extreme-scale branches. The "DP invariants under sharding"
+section checks the properties the cohort-sharded engine's privacy claim
+rests on: single-device sensitivity of the aggregated update stays ≤ S/(qN)
+under every aggregation topology, Poisson-excluded slots contribute exactly
+zero, and participation accounting is backend- and shard-count-invariant.
 """
 import jax
 import jax.numpy as jnp
@@ -13,6 +17,7 @@ from repro.configs import DPConfig
 from repro.core.clipping import clip_by_global_norm
 from repro.core.dp_fedavg import aggregate, finalize_round
 from repro.core.server_optim import apply_update, init_state
+from repro.fl.engine import canon_pad, cohort_sum, poisson_select
 from repro.utils.pytree import tree_global_norm
 
 
@@ -114,3 +119,105 @@ def test_momentum_accumulates():
     inc = np.diff(vals)
     assert inc[-1] > inc[0]                 # momentum ramps up
     assert inc[-1] < 1.0 / (1 - 0.9) * 2.2  # bounded by 1/(1−μ) scale
+
+
+# ----------------------- DP invariants under sharding -----------------------
+#
+# cohort_sum's n_blocks is the aggregation-topology knob (the sharded
+# engine's per-shard partials are exactly its blocks), so sweeping it here
+# is sweeping shard counts — without needing multiple devices.
+
+
+def _clipped_cohort(seed, P, clip, scale=5.0):
+    """Stacked per-client updates, each clipped to norm ≤ clip."""
+    keys = jax.random.split(jax.random.PRNGKey(seed), P)
+    stack = jax.vmap(lambda k: _tree(k, scale))(keys)
+    clipped, _, _ = jax.vmap(
+        lambda u: clip_by_global_norm(u, clip))(stack)
+    return clipped
+
+
+@pytest.mark.parametrize("n_blocks", [1, 2, 4, 8, 16])
+@pytest.mark.parametrize("seed", [0, 11])
+def test_single_device_sensitivity_bounded_any_topology(n_blocks, seed):
+    """Removing any single device from the round moves the *averaged*
+    update by at most S/(qN), whatever block/shard structure aggregates the
+    clipped sum — the clipped-sum sensitivity bound the accountant's ε
+    depends on survives every aggregation topology [MRTZ17]."""
+    P, qN, clip = 16, 12, 0.8
+    clipped = _clipped_cohort(seed, P, clip)
+    mask = (jnp.arange(P) < qN).astype(jnp.float32)
+    base = cohort_sum(clipped, mask, n_blocks)
+    for slot in (0, 5, qN - 1):
+        drop = mask.at[slot].set(0.0)
+        neigh = cohort_sum(clipped, drop, n_blocks)
+        diff = jax.tree_util.tree_map(lambda a, b: (a - b) / qN, base, neigh)
+        sens = float(tree_global_norm(diff))
+        assert sens <= clip / qN * (1 + 1e-4), (n_blocks, slot, sens)
+        # and the removed contribution is that device's clipped update
+        # exactly (float-exact: masked adds are adds of true zeros)
+        dev = jax.tree_util.tree_map(lambda l: l[slot] / qN, clipped)
+        np.testing.assert_allclose(sens, float(tree_global_norm(dev)),
+                                   rtol=1e-5)
+
+
+@pytest.mark.parametrize("n_blocks", [1, 2, 4, 8])
+def test_poisson_mask_zeroes_excluded_slots(n_blocks):
+    """Slots the Poisson draw leaves empty (and padded slots of a ragged
+    buffer) contribute *exactly* zero to the aggregated update — even if
+    the buffer's excluded rows hold garbage, because 0·x and x+0 are exact
+    in IEEE float. This is what makes the fixed-shape buffer a faithful
+    implementation of variable-size rounds."""
+    N, buffer = 64, canon_pad(24, n_blocks)
+    avail = jnp.ones((N,), bool)
+    ids, slot_mask, took = poisson_select(jax.random.PRNGKey(3), 0.25,
+                                          avail, buffer)
+    assert int(slot_mask.sum()) == int(took.sum())  # buffer ample: no drops
+    assert not bool(slot_mask[-1])                  # some excluded slots
+    clean = _clipped_cohort(7, buffer, 0.8)
+    m = slot_mask.astype(jnp.float32)
+    poisoned = jax.tree_util.tree_map(
+        lambda l: jnp.where(m.reshape((-1,) + (1,) * (l.ndim - 1)) > 0,
+                            l, 1e30), clean)
+    zeroed = jax.tree_util.tree_map(
+        lambda l: l * m.reshape((-1,) + (1,) * (l.ndim - 1)), clean)
+    a = cohort_sum(poisoned, slot_mask, n_blocks)
+    b = cohort_sum(zeroed, slot_mask, n_blocks)
+    for la, lb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+@pytest.mark.parametrize("sampling", ["fixed", "poisson"])
+def test_participation_identical_across_backends_and_shards(sampling):
+    """Per-device participation counts — the quantity per-user privacy
+    accounting reads — are identical across the engine's compiled scan, its
+    per-round reference loop, and every available shard count."""
+    from repro.configs import ClientConfig, get_config
+    from repro.data.corpus import BigramCorpus
+    from repro.data.federated import FederatedDataset
+    from repro.fl.engine import SimEngine
+    from repro.models import build
+
+    cfg = get_config("gboard-cifg-lstm").with_(vocab=64, d_model=8, d_ff=16)
+    model = build(cfg)
+    ds = FederatedDataset(BigramCorpus(vocab_size=64, seed=0), n_users=40,
+                          seq_len=8, sentences_per_user=6)
+    dp = DPConfig(clients_per_round=8, noise_multiplier=0.0, clip_norm=0.8,
+                  server_opt="sgd", server_lr=0.1, sampling=sampling)
+    cl = ClientConfig(local_epochs=1, batch_size=4, lr=0.3)
+    shard_counts = [s for s in (1, 2, 8) if s <= len(jax.devices())]
+    counts = {}
+    for s in shard_counts:
+        eng = SimEngine(model, ds.to_device_arrays(), dp, cl,
+                        n_local_batches=2, availability=1.0,
+                        rounds_per_call=2, num_shards=s)
+        for runner in ("run", "run_python"):
+            state = eng.init_state(model.init(jax.random.PRNGKey(1)),
+                                   seed=0)
+            state, _ = getattr(eng, runner)(state, 4)
+            counts[(s, runner)] = np.asarray(state.participation)
+    ref = counts[(1, "run")]
+    assert ref.sum() > 0
+    for key, c in counts.items():
+        np.testing.assert_array_equal(c, ref, err_msg=str(key))

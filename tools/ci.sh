@@ -41,8 +41,11 @@ if [[ "${1:-}" == "--slow" ]]; then
 fi
 
 echo "== smoke: compiled simulation engine benchmark (dry run) =="
+# force 8 host devices so the per-shard-count records (shards={1,2,4,8})
+# land in BENCH_ci.json even on a single-accelerator box
 rm -f BENCH_ci.json
-BENCH_JSON=BENCH_ci.json PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
+  BENCH_JSON=BENCH_ci.json PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
   python benchmarks/bench_sim_engine.py --dry-run
 test -s BENCH_ci.json || { echo "FAIL: BENCH_ci.json not written" >&2; exit 1; }
 echo "BENCH_ci.json records:"
