@@ -24,13 +24,26 @@ The sharded sweep additionally reports rounds/sec for every shard count in
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to exercise the
 whole {1, 2, 4, 8} grid.
 
+``--chunk-sweep`` benchmarks the *streaming* cohort accumulation
+(`SimEngine(cohort_chunk=…)`) at cohorts {200, 1000, 5000}: for each chunk
+size it emits rounds/sec AND the compiled round program's peak live-buffer
+bytes (``jax.jit(...).lower().compile().memory_analysis()
+.temp_size_in_bytes``) — the memory/throughput trajectory the streaming
+path exists for. ``chunk=0`` is the materializing baseline; when its
+estimated peak exceeds ``BENCH_MEM_RUN_LIMIT`` bytes (default 2 GB) the
+record keeps the memory number but skips the timed run rather than
+swapping the box.
+
     PYTHONPATH=src python benchmarks/bench_sim_engine.py [--dry-run]
 
-``--dry-run`` shrinks cohorts/rounds to a seconds-long CI smoke.
+``--dry-run`` shrinks cohorts/rounds to a seconds-long CI smoke (including
+one streaming-vs-materializing chunk record).
 """
 from __future__ import annotations
 
 import argparse
+import math
+import os
 import time
 
 import jax
@@ -39,13 +52,20 @@ from benchmarks.common import emit
 from repro.configs import ClientConfig, DPConfig, get_config
 from repro.data.corpus import BigramCorpus
 from repro.data.federated import FederatedDataset
+from repro.fl.engine import SimEngine
 from repro.fl.population import PopulationSim
+from repro.fl.reduction import CANON_BLOCKS, canon_pad
 from repro.fl.round import FederatedTrainer
 from repro.models import build
 
 VOCAB = 300  # small NWP config: round *driver* overhead (stacking,
 D_MODEL = 24  # retracing, dispatch), not matmuls, should dominate —
 D_FF = 48     # that's what this bench isolates
+
+# --chunk-sweep: don't execute (only compile) configurations whose peak
+# live buffers exceed this — the materializing baseline at cohort 5000
+# wants ~8 GB of temp on CPU
+MEM_RUN_LIMIT = int(os.environ.get("BENCH_MEM_RUN_LIMIT", 2 * 10 ** 9))
 
 
 def _setup(n_users: int):
@@ -63,6 +83,68 @@ def _rounds_per_sec(tr: FederatedTrainer, warmup: int, rounds: int) -> float:
     t0 = time.perf_counter()
     tr.train(rounds)
     return rounds / (time.perf_counter() - t0)
+
+
+def _chunk_record(model, data, dp, cl, *, cohort, chunk, rounds, k,
+                  mem_baseline=None):
+    """One streaming-accumulation record: build the engine at this
+    ``cohort_chunk``, read the compiled k-round program's peak live-buffer
+    bytes, then (if it fits under MEM_RUN_LIMIT) time actual rounds through
+    the same AOT executable — one compile per record. Returns (peak_bytes,
+    rounds_per_sec — NaN when the run was skipped)."""
+    eng = SimEngine(model, data, dp, cl, n_local_batches=2, availability=0.5,
+                    rounds_per_call=k, cohort_chunk=chunk)
+    state = eng.init_state(model.init(jax.random.PRNGKey(1)), seed=0)
+    compiled = eng._run_k(k).lower(state).compile()
+    peak = compiled.memory_analysis().temp_size_in_bytes
+    rps = float("nan")
+    if peak <= MEM_RUN_LIMIT:
+        state, _ = compiled(state)                # warm-up call
+        n_calls = max(1, rounds // k)
+        t0 = time.perf_counter()
+        for _ in range(n_calls):
+            state, _ = compiled(state)
+        jax.block_until_ready(state.params)
+        rps = n_calls * k / (time.perf_counter() - t0)
+    derived = (f"rounds_per_sec={rps:.3f};peak_bytes={peak};"
+               f"resolved_chunk={eng.cohort_chunk}")
+    if mem_baseline and peak:
+        derived += f";mem_reduction_vs_materialize={mem_baseline / peak:.1f}x"
+    if math.isnan(rps):
+        # memory-only record: 0.0 = "unmeasured" (a negative or NaN value
+        # would poison downstream min/mean aggregation of the trajectory)
+        derived += f";run_skipped=peak>{MEM_RUN_LIMIT}B"
+    emit(f"sim_engine/chunked/cohort={cohort}/chunk="
+         f"{'materialize' if chunk == 0 else eng.cohort_chunk}",
+         0.0 if math.isnan(rps) else 1e6 / rps, derived)
+    return peak, rps
+
+
+def chunk_sweep(dry_run: bool = False):
+    """--chunk-sweep: rounds/sec + peak live-buffer bytes across
+    ``cohort_chunk`` at cohorts {200, 1000, 5000} (the paper's production
+    regime needs the 5k leg — the materializing path can't run it on a
+    laptop-class box at all, which is the point)."""
+    cohorts = [8] if dry_run else [200, 1000, 5000]
+    for cohort in cohorts:
+        n_users = max(2 * cohort, 50)
+        cfg, model, ds = _setup(n_users)
+        data = ds.to_device_arrays()
+        dp = DPConfig(clients_per_round=cohort, noise_multiplier=0.3,
+                      clip_norm=0.8, server_opt="momentum", server_lr=0.5,
+                      server_momentum=0.9)
+        cl = ClientConfig(local_epochs=1, batch_size=10, lr=0.3)
+        rounds = 2 if dry_run else max(2, 8000 // cohort)
+        k = 2 if dry_run else min(4, rounds)
+        blk = canon_pad(cohort) // CANON_BLOCKS   # canonical block size
+        # materializing baseline first so streaming records carry the ratio
+        mem0, _ = _chunk_record(model, data, dp, cl, cohort=cohort, chunk=0,
+                                rounds=rounds, k=k)
+        chunks = [None] if dry_run else \
+            [c for c in (5, None, 125) if c is None or blk % c == 0]
+        for chunk in chunks:
+            _chunk_record(model, data, dp, cl, cohort=cohort, chunk=chunk,
+                          rounds=rounds, k=k, mem_baseline=mem0)
 
 
 def run(dry_run: bool = False, shards=(1, 2, 4, 8)):
@@ -142,10 +224,17 @@ def run(dry_run: bool = False, shards=(1, 2, 4, 8)):
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--dry-run", action="store_true",
-                    help="tiny cohort/rounds smoke for CI")
+                    help="tiny cohort/rounds smoke for CI (includes one "
+                         "streaming-vs-materializing chunk record)")
     ap.add_argument("--shards", default="1,2,4,8",
                     help="comma-separated shard counts to sweep (counts "
                          "above the visible device count are skipped)")
+    ap.add_argument("--chunk-sweep", action="store_true",
+                    help="sweep cohort_chunk at cohorts {200, 1000, 5000}: "
+                         "rounds/sec + peak live-buffer bytes per record")
     args = ap.parse_args()
-    run(dry_run=args.dry_run,
-        shards=tuple(int(s) for s in args.shards.split(",") if s))
+    if not args.chunk_sweep:
+        run(dry_run=args.dry_run,
+            shards=tuple(int(s) for s in args.shards.split(",") if s))
+    if args.chunk_sweep or args.dry_run:
+        chunk_sweep(dry_run=args.dry_run)

@@ -1,15 +1,34 @@
 """Per-user update clipping (Algorithm 1, UserUpdate's final line).
 
-``clip_by_global_norm`` is the reference pytree path; the Pallas-backed path
-(`repro.kernels.dp_clip`) fuses the square-accumulate / clip-scale /
-sum-accumulate over flat f32 vectors and is validated against this.
+``clip_by_global_norm`` is the validated reference pytree path.
+``clip_accumulate_tree`` is the *streaming* form used by the chunked cohort
+accumulator: one clip→fold step ``acc ← acc + scale·min(1, S/‖Δ‖)·Δ`` with
+two interchangeable implementations —
+
+* ``"fused"`` — the Pallas flat-parameter kernels
+  (`repro.kernels.dp_clip`): one fused sum-of-squares sweep and one fused
+  scale-and-accumulate sweep per update (compiled Pallas on TPU, the Pallas
+  interpreter on CPU — same kernel bodies either way);
+* ``"tree"`` — the pytree reference built on :func:`clip_by_global_norm`'s
+  arithmetic, kept as the independent oracle the fused path is validated
+  against.
+
+Both paths compute the pre-clip norm, the clip factor, and the was-clipped
+flag with identical formulas; they differ only in the association of the
+sum-of-squares reduction (tiled kernel vs per-leaf ``jnp.sum``), so they
+agree to float tolerance, and each is individually deterministic — the
+bit-exact ``cohort_chunk``/shard parity of the engine holds within either
+path.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.dp_clip import ops as dp_clip_ops
 from repro.utils.pytree import tree_global_norm
+
+CLIP_PATHS = ("fused", "tree")
 
 
 def clip_factor(norm, clip_norm: float):
@@ -24,3 +43,30 @@ def clip_by_global_norm(update, clip_norm: float):
     clipped = jax.tree_util.tree_map(
         lambda l: (l.astype(jnp.float32) * factor).astype(l.dtype), update)
     return clipped, norm, (factor < 1.0).astype(jnp.float32)
+
+
+def clip_accumulate_tree(acc, update, clip_norm: float, scale=None,
+                         *, clip_path: str = "fused", interpret=None):
+    """One streaming clip→accumulate step over f32 pytrees.
+
+    ``acc ← acc + scale·min(1, S/‖Δ‖)·Δ`` — ``scale`` (optional traced
+    scalar) carries the 0/1 slot mask, so a masked slot contributes exactly
+    ±0 to the accumulator (the DP "excluded slots contribute nothing"
+    invariant). Returns ``(new_acc, pre_clip_norm, was_clipped)`` where the
+    norm/flag describe the *unmasked* update (callers mask the stats
+    themselves so the denominator stays the realized round size).
+    """
+    if clip_path not in CLIP_PATHS:
+        raise ValueError(f"clip_path must be one of {CLIP_PATHS}, "
+                         f"got {clip_path!r}")
+    if clip_path == "fused":
+        new_acc, norm = dp_clip_ops.clip_accumulate(
+            acc, update, clip_norm, scale, interpret=interpret)
+        factor = clip_factor(norm, clip_norm)
+    else:
+        norm = tree_global_norm(update)
+        factor = clip_factor(norm, clip_norm)
+        f = factor if scale is None else factor * scale
+        new_acc = jax.tree_util.tree_map(
+            lambda a, d: a + f * d.astype(jnp.float32), acc, update)
+    return new_acc, norm, (factor < 1.0).astype(jnp.float32)

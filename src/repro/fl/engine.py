@@ -18,9 +18,17 @@ a single ``lax.scan``:
   corpus tensor built by ``FederatedDataset.to_device_arrays()``; no host
   data movement after engine construction;
 * **round** — the clip → sum → noise → server-optimizer (Nesterov) step of
-  Algorithm 1 fused into the scan body (`repro.fl.client.client_updates` +
+  Algorithm 1 fused into the scan body (`repro.fl.client` +
   `repro.core.dp_fedavg.finalize_round`), with state buffers donated across
-  calls;
+  calls. The clipped sum is accumulated **streamingly**: inside each
+  canonical block a ``lax.scan`` over contiguous ``cohort_chunk``-client
+  chunks runs gather → local SGD → fused Pallas clip→accumulate
+  (`kernels.dp_clip`) and folds straight into the block's running partial,
+  so peak update memory is O(cohort_chunk·|params|) — not the materializing
+  O(cohort·|params|) stack — and fully-masked padding chunks skip their
+  compute via a scalar ``lax.cond``. The per-slot fold is strictly
+  sequential (`fl.reduction.slot_fold` association), making trajectories
+  bit-identical across every ``cohort_chunk`` dividing the block size;
 * **eval hooks** — a user-supplied ``eval_fn(params, round_idx) -> pytree``
   evaluated *inside* the scan body every ``eval_every`` rounds (a masked
   ``lax.cond`` skips the computation on the other rounds), with stacked
@@ -77,22 +85,27 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ClientConfig, DPConfig, MeshConfig
+from repro.core.clipping import CLIP_PATHS
 from repro.core.dp_fedavg import finalize_round, server_step
 from repro.core.server_optim import ServerOptState, init_state
 from repro.data.tokenizer import PAD
-from repro.fl.client import client_updates
+from repro.fl.client import (client_updates, local_deltas,
+                             stream_block_sums)
+# The canonical-reduction primitives live in `repro.fl.reduction` (shared
+# with the host round body); re-exported here for backwards compatibility.
+from repro.fl.reduction import (CANON_BLOCKS, block_sums as _block_sums,
+                                canon_pad, cohort_sum,
+                                fold_blocks as _fold_blocks, n_canon_blocks,
+                                resolve_chunk)
 from repro.launch.mesh import make_cohort_mesh
 from repro.models.api import Model
 from repro.sharding.specs import (batch_axis_size, cohort_spec,
                                   sim_mesh_config)
 from repro.utils.compat import shard_map
 
-# Canonical block count of the topology-invariant cohort reduction: results
-# are bit-identical across every shard count dividing this. 8 covers the
-# power-of-two shard counts the CI matrix exercises; a non-dividing
-# num_shards still works (blocks are padded up) but is only bit-stable
-# against itself.
-CANON_BLOCKS = 8
+__all__ = ["CANON_BLOCKS", "EngineState", "SimEngine", "canon_pad",
+           "cohort_sum", "gather_client_batches", "n_canon_blocks",
+           "pace_steering_weights", "poisson_select", "sample_cohort"]
 
 
 class EngineState(NamedTuple):
@@ -179,69 +192,6 @@ def gather_client_batches(examples, counts, ids, keys,
     return batch
 
 
-# ---------------------------------------------------------------- reduction
-
-
-def _block_sums(a, n_blocks: int):
-    """Sum contiguous equal blocks of the leading axis → (n_blocks, ...)."""
-    blk = a.shape[0] // n_blocks
-    return a.reshape((n_blocks, blk) + a.shape[1:]).sum(axis=1)
-
-
-def _fold_blocks(a):
-    """Fixed pairwise-adjacent tree combine over the leading axis."""
-    while a.shape[0] > 1:
-        half = a.shape[0] // 2
-        c = a[0:2 * half:2] + a[1:2 * half:2]
-        if a.shape[0] % 2:
-            c = jnp.concatenate([c, a[-1:]], axis=0)
-        a = c
-    return a[0]
-
-
-def canon_pad(n: int, num_shards: int = 1) -> int:
-    """Smallest padded cohort-buffer size ≥ ``n`` whose canonical blocks
-    align with ``num_shards`` shard boundaries. For every shard count
-    dividing :data:`CANON_BLOCKS` the padded size (and hence the reduction
-    tree) is *identical*, which is what makes cross-shard-count parity
-    bit-exact."""
-    if num_shards < 1:
-        raise ValueError(f"num_shards must be >= 1, got {num_shards}")
-    return -(-max(int(n), 1) // n_canon_blocks(num_shards)) \
-        * n_canon_blocks(num_shards)
-
-
-def n_canon_blocks(num_shards: int = 1) -> int:
-    """Block count of the canonical reduction: :data:`CANON_BLOCKS` whenever
-    the shard count divides it (the bit-parity regime); otherwise the next
-    multiple of ``num_shards`` so shard boundaries still land on blocks."""
-    if CANON_BLOCKS % num_shards == 0:
-        return CANON_BLOCKS
-    return num_shards * max(1, -(-CANON_BLOCKS // num_shards))
-
-
-def cohort_sum(tree, mask, n_blocks: int = CANON_BLOCKS):
-    """Topology-invariant masked sum over a stacked cohort pytree.
-
-    ``tree`` has a leading cohort axis, ``mask`` is the (C,) 0/1 slot mask.
-    Masked slots contribute *exactly* zero (0·x = 0 and x + 0 = x are exact
-    in IEEE float), and the reduction runs block-local sums followed by a
-    fixed pairwise tree over the blocks — the same association no matter how
-    the cohort axis is later sharded, so the DP sensitivity of the sum to
-    any single slot is the same under every aggregation topology."""
-    m = mask.astype(jnp.float32)
-    pad = -(-m.shape[0] // n_blocks) * n_blocks - m.shape[0]
-
-    def one(l):
-        lm = l.astype(jnp.float32) * m.reshape((-1,) + (1,) * (l.ndim - 1))
-        if pad:
-            lm = jnp.concatenate(
-                [lm, jnp.zeros((pad,) + lm.shape[1:], lm.dtype)], axis=0)
-        return _fold_blocks(_block_sums(lm, n_blocks))
-
-    return jax.tree_util.tree_map(one, tree)
-
-
 class SimEngine:
     """K-rounds-per-jit DP-FedAvg simulator over a device-resident population.
 
@@ -264,6 +214,23 @@ class SimEngine:
     association). Needs ≥ ``num_shards`` visible devices (on CPU force them
     with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``).
 
+    ``cohort_chunk`` streams the round: each canonical block's partial sum
+    is accumulated ``cohort_chunk`` clients at a time (gather → local SGD →
+    fused clip→accumulate per chunk), so peak update memory is
+    O(cohort_chunk·|params|) instead of the materializing O(cohort·|params|)
+    stack. The intra-block fold is strictly sequential per slot, so
+    trajectories are **bit-identical across every chunk size dividing the
+    block size** (padded cohort / :data:`CANON_BLOCKS`), composing with the
+    cross-shard parity. ``None`` auto-selects (largest divisor ≤
+    `reduction.DEFAULT_MAX_CHUNK`); ``0`` restores the materializing path
+    (the validated reference / benchmark baseline — its XLA-reduction
+    association is *not* bit-comparable to the streaming family).
+
+    ``clip_path`` selects the per-client clip→accumulate implementation:
+    ``"fused"`` (default) runs the flat-parameter Pallas ``dp_clip`` kernels
+    (interpret mode on CPU, compiled on TPU); ``"tree"`` the pytree
+    reference.
+
     ``eval_fn(params, round_idx) -> pytree`` runs inside the scan on the
     *post-update* params after rounds ``eval_every, 2·eval_every, …``; other
     rounds carry zeros (see history keys ``eval`` / ``eval_mask``).
@@ -279,6 +246,8 @@ class SimEngine:
                  poisson_buffer: Optional[int] = None,
                  num_shards: int = 1,
                  mesh_config: Optional[MeshConfig] = None,
+                 cohort_chunk: Optional[int] = None,
+                 clip_path: str = "fused",
                  eval_fn: Optional[Callable] = None, eval_every: int = 1):
         self.model = model
         self.dp = dp
@@ -348,6 +317,14 @@ class SimEngine:
                 f"{self.padded} must be divisible by num_shards="
                 f"{self.num_shards} and n_blocks={self.n_blocks} — padding "
                 "must never truncate devices (ragged cohorts pad up)")
+        if clip_path not in CLIP_PATHS:
+            raise ValueError(f"clip_path must be one of {CLIP_PATHS}, "
+                             f"got {clip_path!r}")
+        self.clip_path = clip_path
+        # streaming accumulation: chunk size per canonical block (0 = the
+        # legacy materializing path, kept for benchmarking/validation)
+        self.cohort_chunk = resolve_chunk(cohort_chunk,
+                                          self.padded // self.n_blocks)
         n_synth = int(np.asarray(data["synthetic"]).sum())
         expected_avail = availability * (self.n_users - n_synth) + n_synth
         if self.sampling == "fixed" and expected_avail < self.cohort:
@@ -401,7 +378,49 @@ class SimEngine:
         """Per-shard slice of the round: gather → local SGD → clip → masked
         canonical block partial sums. Returns (update-block pytree with a
         leading (n_blocks,) axis, (n_blocks, 4) stat blocks packing
-        [Σ norms, Σ clipped-flags, Σ losses, Σ mask])."""
+        [Σ norms, Σ clipped-flags, Σ losses, Σ mask]). Streams
+        ``cohort_chunk`` clients at a time unless ``cohort_chunk == 0``
+        (the legacy materializing path)."""
+        if self.cohort_chunk == 0:
+            return self._materialized_block_sums(params, ids, keys,
+                                                 slot_mask, n_blocks)
+        return self._streamed_block_sums(params, ids, keys, slot_mask,
+                                         n_blocks)
+
+    def _streamed_block_sums(self, params, ids, keys, slot_mask,
+                             n_blocks: int):
+        """Streaming accumulation: a scan over contiguous ``cohort_chunk``
+        slices of each canonical block runs gather → local SGD per chunk and
+        folds the chunk's clipped updates into the block's running partial
+        (`fl.client.stream_block_sums`) — peak update memory is
+        O(cohort_chunk·|params|), fully-masked padding chunks skip their
+        compute, and the per-slot fold keeps the canonical intra-block
+        association so every dividing chunk size is bit-identical."""
+        chunk = self.cohort_chunk
+        cpb = ids.shape[0] // (n_blocks * chunk)     # chunks per block
+        shape3 = (n_blocks, cpb, chunk)
+        ids_r = ids.reshape(shape3)
+        keys_r = keys.reshape(shape3 + keys.shape[1:])
+        mask_r = slot_mask.astype(jnp.float32).reshape(shape3)
+
+        def compute_chunk(inputs):
+            c_ids, c_keys = inputs
+            batches = gather_client_batches(self.examples, self.counts,
+                                            c_ids, c_keys,
+                                            self.n_local_batches,
+                                            self.client.batch_size)
+            return local_deltas(self.model, params, batches, self.client)
+
+        return stream_block_sums(compute_chunk, (ids_r, keys_r), mask_r,
+                                 params, self.dp.clip_norm,
+                                 clip_path=self.clip_path)
+
+    def _materialized_block_sums(self, params, ids, keys, slot_mask,
+                                 n_blocks: int):
+        """Legacy materializing path (``cohort_chunk=0``): vmap the whole
+        padded slice, stack every clipped update, block-reduce once —
+        O(cohort·|params|) peak memory, XLA-reduction association. Kept as
+        the validated reference and the benchmark baseline."""
         batches = gather_client_batches(self.examples, self.counts, ids,
                                         keys, self.n_local_batches,
                                         self.client.batch_size)

@@ -1,0 +1,159 @@
+"""Canonical topology-invariant cohort reduction (shared by engine + host).
+
+Because float addition is not associative, the *association* of the round's
+clipped-update sum is part of the DP mechanism's contract: the sharded
+engine, the unsharded engine, and the host reference loop must all combine
+per-client contributions in the same fixed order or their trajectories (and
+anything downstream — σ calibration checks, parity tests, the secret-sharer
+measurements) drift with the execution topology.
+
+The canonical association has two levels:
+
+* **across blocks** — the padded cohort buffer is split into
+  :data:`CANON_BLOCKS` contiguous blocks whose boundaries align with every
+  supported shard boundary; block partials are combined by a fixed pairwise
+  tree (:func:`fold_blocks`). Bit-identical for every shard count dividing
+  :data:`CANON_BLOCKS` (PR 3).
+* **within a block** — slots are folded strictly left-to-right, one at a
+  time (:func:`slot_fold` — ``(((0 + u₀) + u₁) + u₂) + …``). A streaming
+  accumulator that processes the block in chunks of any size reproduces the
+  identical association as long as chunks are contiguous and the per-chunk
+  fold is sequential — which is exactly how `fl.client.stream_block_sums`
+  consumes it. Bit-identical across every ``cohort_chunk`` dividing the
+  block size (PR 4).
+
+Masked slots contribute *exactly* zero: ``0·x ∈ {+0, −0}`` and IEEE-754
+addition of a signed zero to any accumulator that is not ``−0`` is exact;
+the accumulators start at ``+0`` and a round-to-nearest sum can only produce
+``−0`` from ``−0`` operands, so the fold never creates one.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Canonical block count of the topology-invariant cohort reduction: results
+# are bit-identical across every shard count dividing this. 8 covers the
+# power-of-two shard counts the CI matrix exercises; a non-dividing
+# num_shards still works (blocks are padded up) but is only bit-stable
+# against itself.
+CANON_BLOCKS = 8
+
+# Auto-selected cohort_chunk ceiling: the streaming accumulator's peak
+# update memory is O(cohort_chunk · |params|), so the default caps the
+# chunk at the largest divisor of the block size ≤ this.
+DEFAULT_MAX_CHUNK = 32
+
+
+def block_sums(a, n_blocks: int):
+    """Sum contiguous equal blocks of the leading axis → (n_blocks, ...).
+
+    XLA-reduction association (the *materializing* path); the streaming path
+    builds the same block partials with :func:`slot_fold` instead.
+    """
+    blk = a.shape[0] // n_blocks
+    return a.reshape((n_blocks, blk) + a.shape[1:]).sum(axis=1)
+
+
+def fold_blocks(a):
+    """Fixed pairwise-adjacent tree combine over the leading axis."""
+    while a.shape[0] > 1:
+        half = a.shape[0] // 2
+        c = a[0:2 * half:2] + a[1:2 * half:2]
+        if a.shape[0] % 2:
+            c = jnp.concatenate([c, a[-1:]], axis=0)
+        a = c
+    return a[0]
+
+
+def slot_fold(acc, stacked):
+    """Strict left-to-right sequential sum of ``stacked``'s leading axis
+    into ``acc`` — the canonical *intra-block* association. Splitting the
+    leading axis into contiguous chunks and folding chunk-by-chunk yields
+    bit-identical results for every chunk size, which is the invariant the
+    streaming accumulator's ``cohort_chunk`` parity rests on."""
+    def step(a, x):
+        return jax.tree_util.tree_map(jnp.add, a, x), None
+    acc, _ = jax.lax.scan(step, acc, stacked)
+    return acc
+
+
+def canon_pad(n: int, num_shards: int = 1) -> int:
+    """Smallest padded cohort-buffer size ≥ ``n`` whose canonical blocks
+    align with ``num_shards`` shard boundaries. For every shard count
+    dividing :data:`CANON_BLOCKS` the padded size (and hence the reduction
+    tree) is *identical*, which is what makes cross-shard-count parity
+    bit-exact."""
+    if num_shards < 1:
+        raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+    return -(-max(int(n), 1) // n_canon_blocks(num_shards)) \
+        * n_canon_blocks(num_shards)
+
+
+def n_canon_blocks(num_shards: int = 1) -> int:
+    """Block count of the canonical reduction: :data:`CANON_BLOCKS` whenever
+    the shard count divides it (the bit-parity regime); otherwise the next
+    multiple of ``num_shards`` so shard boundaries still land on blocks."""
+    if CANON_BLOCKS % num_shards == 0:
+        return CANON_BLOCKS
+    return num_shards * max(1, -(-CANON_BLOCKS // num_shards))
+
+
+def auto_chunk(blk: int, max_chunk: int = DEFAULT_MAX_CHUNK) -> int:
+    """Largest divisor of the block size ≤ ``max_chunk`` — the default
+    ``cohort_chunk``. Dividing the block keeps chunk boundaries inside
+    block boundaries, so the streaming fold reproduces the canonical
+    intra-block association exactly."""
+    for c in range(min(blk, max_chunk), 0, -1):
+        if blk % c == 0:
+            return c
+    return 1
+
+
+def resolve_chunk(cohort_chunk, blk: int, strict: bool = True) -> int:
+    """Validate/auto-select the streaming chunk size for block size ``blk``.
+
+    ``None`` → :func:`auto_chunk`; ``0`` → 0, the materializing-path
+    sentinel (callers dispatch on it); an explicit value must divide the
+    block size (that is the bit-parity regime — a straddling chunk would
+    change which block a slot folds into). With ``strict=False`` a
+    non-dividing value is rounded down to the largest divisor ≤ it instead
+    of raising — the host loop's realized round size (and hence block size)
+    varies per round, so a fixed knob can't be expected to divide every
+    one."""
+    if cohort_chunk is None:
+        return auto_chunk(blk)
+    c = int(cohort_chunk)
+    if c == 0 or (c >= 1 and blk % c == 0):
+        return c
+    if not strict and c >= 1:
+        return auto_chunk(blk, max_chunk=c)
+    divisors = [d for d in range(1, blk + 1) if blk % d == 0]
+    raise ValueError(
+        f"cohort_chunk={cohort_chunk} must divide the canonical block "
+        f"size {blk} (padded cohort / {CANON_BLOCKS} blocks) so chunk "
+        f"boundaries stay inside block boundaries; valid values: "
+        f"{divisors} (or None to auto-select, 0 for the materializing "
+        "path)")
+
+
+def cohort_sum(tree, mask, n_blocks: int = CANON_BLOCKS):
+    """Topology-invariant masked sum over a stacked cohort pytree.
+
+    ``tree`` has a leading cohort axis, ``mask`` is the (C,) 0/1 slot mask.
+    Masked slots contribute *exactly* zero (0·x = 0 and x + 0 = x are exact
+    in IEEE float), and the reduction runs block-local sums followed by a
+    fixed pairwise tree over the blocks — the same association no matter how
+    the cohort axis is later sharded, so the DP sensitivity of the sum to
+    any single slot is the same under every aggregation topology."""
+    m = mask.astype(jnp.float32)
+    pad = -(-m.shape[0] // n_blocks) * n_blocks - m.shape[0]
+
+    def one(l):
+        lm = l.astype(jnp.float32) * m.reshape((-1,) + (1,) * (l.ndim - 1))
+        if pad:
+            lm = jnp.concatenate(
+                [lm, jnp.zeros((pad,) + lm.shape[1:], lm.dtype)], axis=0)
+        return fold_blocks(block_sums(lm, n_blocks))
+
+    return jax.tree_util.tree_map(one, tree)

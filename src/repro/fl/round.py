@@ -14,12 +14,16 @@ distributed round is `repro.launch.steps.fed_train_step`. Three backends:
 
 ``sampling`` (default ``dp.sampling``) selects fixed-size rounds (Algorithm
 1) or Poisson-composed variable-size rounds on every backend; the accountant
-is constructed with the matching bound. Engine backends additionally accept
-``num_shards`` (shard the per-round cohort axis across that many devices —
-trajectories are bit-identical across shard counts dividing
-`engine.CANON_BLOCKS`, see `repro.fl.engine`) and an in-scan
-``eval_fn(params, round_idx)`` hook, whose stacked outputs land in
-``trainer.eval_history``.
+is constructed with the matching bound. ``cohort_chunk`` / ``clip_path``
+control the streaming round accumulation on *every* backend (both the
+engine and the host loop fold ``cohort_chunk`` clients at a time through
+the canonical block grid instead of materializing the full clipped-update
+stack; ``cohort_chunk=0`` restores the materializing reference). Engine
+backends additionally accept ``num_shards`` (shard the per-round cohort
+axis across that many devices — trajectories are bit-identical across shard
+counts dividing `engine.CANON_BLOCKS` *and* across dividing chunk sizes,
+see `repro.fl.engine`) and an in-scan ``eval_fn(params, round_idx)`` hook,
+whose stacked outputs land in ``trainer.eval_history``.
 """
 from __future__ import annotations
 
@@ -60,7 +64,9 @@ class FederatedTrainer:
                  pop: Optional[PopulationSim] = None, seed: int = 0,
                  n_local_batches: int = 4, backend: str = "host",
                  rounds_per_call: int = 8, sampling: Optional[str] = None,
-                 num_shards: int = 1, eval_fn=None, eval_every: int = 1):
+                 num_shards: int = 1, cohort_chunk: Optional[int] = None,
+                 clip_path: str = "fused", eval_fn=None,
+                 eval_every: int = 1):
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}, "
                              f"got {backend!r}")
@@ -99,7 +105,12 @@ class FederatedTrainer:
                 raise ValueError("eval_fn is an engine-backend feature "
                                  "(in-scan hook); score params post hoc on "
                                  "the host backend instead")
-            self._round_fn = make_round_fn(model, client, dp)
+            # the host reference loop streams its round body through the
+            # same chunked accumulator as the engine (identical canonical
+            # association; see fl.client.round_compute)
+            self._round_fn = make_round_fn(model, client, dp,
+                                           cohort_chunk=cohort_chunk,
+                                           clip_path=clip_path)
             self.engine = None
             self._estate = None
         else:
@@ -121,6 +132,7 @@ class FederatedTrainer:
                 pace_penalty=self.pop.pace_penalty,
                 rounds_per_call=rounds_per_call,
                 sampling=self.sampling, num_shards=num_shards,
+                cohort_chunk=cohort_chunk, clip_path=clip_path,
                 eval_fn=eval_fn, eval_every=eval_every)
             self._estate = self.engine.init_state(
                 params, seed=seed, opt_state=self.state.opt_state)

@@ -10,6 +10,12 @@ Tiles are (ROWS, 128) f32 — lane-dim 128, sublane a multiple of 8 — so the
 VPU operates on full native registers. The sum-of-squares kernel keeps a
 scalar accumulator in SMEM across the sequential grid; the accumulate kernel
 is a pure elementwise fused multiply-add.
+
+``interpret=None`` (the default) auto-selects per backend: compiled Pallas
+on TPU, interpret mode everywhere else (CPU executes the same kernel bodies
+through the Pallas interpreter — numerically identical, so the simulation
+engine's streaming accumulator runs the *same* clip→accumulate code path it
+will run on hardware).
 """
 from __future__ import annotations
 
@@ -23,6 +29,23 @@ from jax.experimental.pallas import tpu as pltpu
 LANES = 128
 ROWS = 256          # 256×128 f32 tile = 128 KiB, comfortably inside VMEM
 TILE = ROWS * LANES
+
+
+def default_interpret() -> bool:
+    """Backend auto-select: real Pallas on TPU, interpreter elsewhere."""
+    return jax.default_backend() != "tpu"
+
+
+def _check_tiled(name: str, x2d) -> None:
+    """The kernels sweep (ROWS, LANES) tiles over a sequential grid — a
+    ragged input would silently read out of the last block. Fail loudly at
+    trace time instead (`ops._to_tiles` is the supported padding path)."""
+    if x2d.ndim != 2 or x2d.shape[-1] != LANES or x2d.shape[0] % ROWS:
+        raise ValueError(
+            f"{name}: input must be 2-D (k·{ROWS}, {LANES}) — the padded "
+            f"flat-vector tile layout (TILE={TILE} elements; see "
+            f"repro.kernels.dp_clip.ops._to_tiles) — got shape "
+            f"{tuple(x2d.shape)}")
 
 
 def _sumsq_kernel(x_ref, out_ref, acc_ref):
@@ -40,8 +63,11 @@ def _sumsq_kernel(x_ref, out_ref, acc_ref):
         out_ref[0] = acc_ref[0]
 
 
-def sumsq(x2d, *, interpret: bool = True):
+def sumsq(x2d, *, interpret=None):
     """x2d: (n_tiles·ROWS, LANES) f32 → scalar sum of squares."""
+    _check_tiled("sumsq", x2d)
+    if interpret is None:
+        interpret = default_interpret()
     n = x2d.shape[0] // ROWS
     return pl.pallas_call(
         _sumsq_kernel,
@@ -58,8 +84,16 @@ def _clip_acc_kernel(factor_ref, delta_ref, acc_ref, out_ref):
     out_ref[...] = acc_ref[...] + factor_ref[0] * delta_ref[...].astype(jnp.float32)
 
 
-def clip_accumulate_2d(acc2d, delta2d, factor, *, interpret: bool = True):
+def clip_accumulate_2d(acc2d, delta2d, factor, *, interpret=None):
     """out = acc + factor · delta, single fused sweep. All (R·ROWS, LANES)."""
+    _check_tiled("clip_accumulate_2d", acc2d)
+    _check_tiled("clip_accumulate_2d", delta2d)
+    if acc2d.shape != delta2d.shape:
+        raise ValueError(
+            f"clip_accumulate_2d: acc and delta must share one tile layout, "
+            f"got {tuple(acc2d.shape)} vs {tuple(delta2d.shape)}")
+    if interpret is None:
+        interpret = default_interpret()
     n = acc2d.shape[0] // ROWS
     return pl.pallas_call(
         _clip_acc_kernel,

@@ -1,9 +1,15 @@
 """jit'd wrappers: pytree-level fused clip-and-accumulate.
 
-``fused_sumsq(tree)`` / ``clip_accumulate(acc_tree, delta_tree, factor)``
-flatten each leaf, pad to the (ROWS·LANES) tile, and run the Pallas kernels;
-`interpret=True` executes the kernel bodies on CPU for validation (TPU is
-the compile target).
+``fused_sumsq(tree)`` / ``clip_accumulate(acc_tree, delta_tree, clip_norm)``
+flatten each leaf, pad to the (ROWS·LANES) tile, and run the Pallas kernels.
+``interpret=None`` auto-selects per backend (compiled Pallas on TPU, the
+Pallas interpreter elsewhere — see `dp_clip.default_interpret`); pass
+``interpret=True`` to force interpreter execution on any backend.
+
+``clip_accumulate(..., scale=m)`` folds a 0/1 participation weight into the
+clip factor so a masked cohort slot accumulates exactly ±0 — the streaming
+engine path (`repro.fl.client.stream_block_sums`) uses this to keep padded
+slots out of the round sum without a separate masking sweep.
 """
 from __future__ import annotations
 
@@ -25,19 +31,22 @@ def _to_tiles(leaf):
 
 
 @partial(jax.jit, static_argnames=("interpret",))
-def fused_sumsq(tree, *, interpret: bool = True):
+def fused_sumsq(tree, *, interpret=None):
     """Global Σx² over a pytree via the tiled Pallas reduction."""
     leaves = jax.tree_util.tree_leaves(tree)
     return sum(K.sumsq(_to_tiles(l), interpret=interpret) for l in leaves)
 
 
 @partial(jax.jit, static_argnames=("clip_norm", "interpret"))
-def clip_accumulate(acc_tree, delta_tree, clip_norm: float,
-                    *, interpret: bool = True):
-    """acc ← acc + min(1, S/‖Δ‖)·Δ  (Algorithm 1's clip + round-sum), fused.
-    Returns (new_acc_tree, pre-clip norm)."""
+def clip_accumulate(acc_tree, delta_tree, clip_norm: float, scale=None,
+                    *, interpret=None):
+    """acc ← acc + scale·min(1, S/‖Δ‖)·Δ  (Algorithm 1's clip + round-sum),
+    fused. ``scale`` (optional traced scalar, e.g. a 0/1 slot mask) is
+    multiplied into the clip factor. Returns (new_acc_tree, pre-clip norm)."""
     ss = fused_sumsq(delta_tree, interpret=interpret)
     factor = clip_factor_ref(ss, clip_norm)
+    if scale is not None:
+        factor = factor * scale
 
     def one(acc, delta):
         a2, d2 = _to_tiles(acc), _to_tiles(delta)

@@ -57,6 +57,16 @@ def main():
                          "devices (engine backend; on CPU force devices "
                          "with XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--cohort-chunk", type=int, default=None,
+                    help="stream the round sum this many clients at a time "
+                         "(peak update memory is O(chunk); default: auto — "
+                         "largest divisor of the canonical block size ≤ 32; "
+                         "0 = legacy materializing path)")
+    ap.add_argument("--clip-path", default="fused",
+                    choices=["fused", "tree"],
+                    help="per-client clip→accumulate implementation: fused "
+                         "Pallas dp_clip kernels (interpret mode on CPU, "
+                         "compiled on TPU) or the pytree reference")
     ap.add_argument("--availability", type=float, default=0.3,
                     help="per-round device check-in probability; keep "
                          "availability·n_users above clients_per_round")
@@ -93,7 +103,9 @@ def main():
     trainer = FederatedTrainer(model, ds, dp, cl, pop=pop, seed=args.seed,
                                n_local_batches=3, backend=args.backend,
                                rounds_per_call=args.rounds_per_call,
-                               num_shards=args.num_shards)
+                               num_shards=args.num_shards,
+                               cohort_chunk=args.cohort_chunk,
+                               clip_path=args.clip_path)
     trainer.train(args.rounds, log_every=max(1, args.rounds // 20))
 
     eps = trainer.accountant.get_epsilon(1e-6)

@@ -1,0 +1,347 @@
+"""Streaming chunked cohort accumulation ↔ materializing path parity.
+
+The engine's round sum is accumulated `cohort_chunk` clients at a time
+(`fl.client.stream_block_sums`): per canonical block, chunks fold
+sequentially slot-by-slot, so the association — and hence the trajectory —
+is *bit-identical across every chunk size dividing the block size*, at zero
+noise and under σ>0, composing with the cross-shard parity of PR 3. That
+invariance is what lets the memory knob (O(chunk) peak update buffers
+instead of O(cohort)) be turned freely without touching the DP mechanism:
+the clipped-sum sensitivity S/(qN) is association-independent only if the
+association actually stays fixed.
+
+The fused Pallas dp_clip clip→accumulate (`clip_path="fused"`, interpret
+mode on CPU) is validated against the `clip_by_global_norm` pytree
+reference (`clip_path="tree"`) and against the legacy materializing path
+(`cohort_chunk=0`).
+
+Shard-composition cases need forced devices:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m pytest -q tests/test_engine_chunked.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ClientConfig, DPConfig, get_config
+from repro.core.clipping import clip_by_global_norm
+from repro.data.corpus import BigramCorpus
+from repro.data.federated import FederatedDataset
+from repro.fl.client import (chunk_accumulate, local_deltas, round_compute)
+from repro.fl.engine import SimEngine, gather_client_batches
+from repro.fl.reduction import auto_chunk, canon_pad, resolve_chunk
+from repro.fl.round import FederatedTrainer
+from repro.models import build
+
+VOCAB = 300
+ROUNDS = 2           # = rounds_per_call → one compiled scan per engine
+COHORT = 32          # padded 32 → block size 4 → chunk grid {1, 2, 4}
+
+needs = {s: pytest.mark.skipif(
+    len(jax.devices()) < s,
+    reason=f"needs {s} devices (XLA_FLAGS="
+           f"--xla_force_host_platform_device_count=8)") for s in (2, 4, 8)}
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("gboard-cifg-lstm").with_(vocab=VOCAB, d_model=24,
+                                               d_ff=48)
+    model = build(cfg)
+    corpus = BigramCorpus(vocab_size=VOCAB, seed=0)
+    ds = FederatedDataset(corpus, n_users=80, seq_len=16,
+                          sentences_per_user=20)
+    return cfg, model, ds
+
+
+@pytest.fixture(scope="module")
+def runner(setup):
+    """Memoized engine runs keyed by config — parity tests share runs."""
+    _, model, ds = setup
+    data = ds.to_device_arrays()
+    cache = {}
+
+    def run(chunk, *, noise=0.0, sampling="fixed", cohort=COHORT,
+            num_shards=1, clip_path="fused"):
+        key = (chunk, noise, sampling, cohort, num_shards, clip_path)
+        if key not in cache:
+            dp = DPConfig(clients_per_round=cohort, noise_multiplier=noise,
+                          clip_norm=0.8, server_opt="momentum",
+                          server_lr=0.5, server_momentum=0.9,
+                          sampling=sampling)
+            cl = ClientConfig(local_epochs=1, batch_size=10, lr=0.3)
+            eng = SimEngine(
+                model, data, dp, cl, n_local_batches=2,
+                availability=1.0 if sampling == "poisson" else 0.6,
+                rounds_per_call=2, cohort_chunk=chunk,
+                num_shards=num_shards, clip_path=clip_path)
+            state = eng.init_state(model.init(jax.random.PRNGKey(1)), seed=0)
+            state, hist = eng.run(state, ROUNDS)
+            cache[key] = (eng, state, hist)
+        return cache[key]
+
+    return run
+
+
+def _max_leaf_diff(a, b):
+    d = jax.tree_util.tree_map(
+        lambda x, y: float(jnp.max(jnp.abs(x.astype(jnp.float32)
+                                           - y.astype(jnp.float32)))), a, b)
+    return max(jax.tree_util.tree_leaves(d))
+
+
+def _assert_bitwise(run_a, run_b):
+    _, sa, ha = run_a
+    _, sb, hb = run_b
+    np.testing.assert_array_equal(ha["loss"], hb["loss"])
+    np.testing.assert_array_equal(ha["mean_update_norm"],
+                                  hb["mean_update_norm"])
+    np.testing.assert_array_equal(ha["n_clients"], hb["n_clients"])
+    np.testing.assert_array_equal(np.asarray(sa.participation),
+                                  np.asarray(sb.participation))
+    assert _max_leaf_diff(sa.params, sb.params) == 0.0
+    assert _max_leaf_diff(sa.opt_state, sb.opt_state) == 0.0
+
+
+# --------------------------------------------------- chunk-size invariance
+
+
+@pytest.mark.parametrize("sampling,chunk", [
+    ("fixed", 1), ("fixed", 2), ("poisson", 2),
+])
+def test_chunk_parity_bit_exact(runner, sampling, chunk):
+    """Zero noise: every cohort_chunk dividing the block size — including
+    chunk=1 and chunk=block — produces bit-identical trajectories. The
+    reference is chunk=4 == the full block (cohort 32 → block size 4);
+    cohort_chunk=None auto-resolution is unit-tested in
+    test_resolve_and_auto_chunk and is the default everywhere else."""
+    _assert_bitwise(runner(chunk, sampling=sampling),
+                    runner(4, sampling=sampling))
+
+
+@pytest.mark.parametrize("chunk", [1, 2])
+def test_chunk_parity_survives_noise(runner, chunk):
+    """σ > 0: the Gaussian draw happens once on the replicated stream after
+    the streamed sum, so noised trajectories are chunk-size-invariant too."""
+    _assert_bitwise(runner(chunk, noise=0.3), runner(4, noise=0.3))
+    _, _, hist = runner(chunk, noise=0.3)
+    np.testing.assert_allclose(hist["noise_std"], 0.3 * 0.8 / COHORT,
+                               rtol=1e-6)
+
+
+@pytest.mark.parametrize("num_shards,chunk", [
+    pytest.param(2, 1, marks=needs[2]),
+    pytest.param(4, 2, marks=needs[4]),
+    pytest.param(8, 4, marks=needs[8]),
+])
+def test_chunk_shard_composition(runner, num_shards, chunk):
+    """Chunking composes with the cohort-axis sharding: any (shard count
+    dividing CANON_BLOCKS) × (chunk dividing the block size) grid point is
+    bit-identical to the unsharded single-reference run — the S/(qN)
+    sensitivity bound survives every aggregation topology unchanged."""
+    _assert_bitwise(runner(chunk, num_shards=num_shards), runner(4))
+
+
+def test_masked_padding_chunks_contribute_nothing(runner):
+    """Ragged cohort (10 of padded 16): the padding slots form fully-masked
+    chunks whose compute is skipped by the scalar cond — skipping must be
+    bit-identical to computing-and-masking, and nobody real is dropped."""
+    runs = {c: runner(c, cohort=10) for c in (1, 2)}
+    for c, (eng, state, hist) in runs.items():
+        assert eng.padded == canon_pad(10) == 16
+        np.testing.assert_array_equal(hist["n_clients"], 10)
+        assert int(np.asarray(state.participation).sum()) == ROUNDS * 10
+    _assert_bitwise(runs[1], runs[2])
+
+
+def test_chunk_accumulate_masked_slot_is_exact_zero(setup):
+    """Unit: a zero mask keeps even extreme-magnitude deltas out of the
+    accumulator bitwise (0·x = ±0 and acc + ±0 = acc), for both clip
+    implementations."""
+    _, model, _ = setup
+    acc_tree = {"w": jnp.full((5, 3), 0.123, jnp.float32)}
+    deltas = {"w": jnp.stack([jnp.full((5, 3), 1e15, jnp.float32),
+                              jnp.full((5, 3), -1e15, jnp.float32)])}
+    losses = jnp.array([3.0, 4.0])
+    mask = jnp.zeros((2,))
+    for path in ("fused", "tree"):
+        (upd, stats) = jax.jit(
+            lambda a: chunk_accumulate((a, jnp.zeros(4)), deltas, losses,
+                                       mask, 0.8, clip_path=path))(acc_tree)
+        np.testing.assert_array_equal(np.asarray(upd["w"]),
+                                      np.asarray(acc_tree["w"]))
+        np.testing.assert_array_equal(np.asarray(stats), 0.0)
+
+
+# ------------------------------------------------- clip-path / legacy refs
+
+
+def test_fused_clip_matches_tree_reference(runner):
+    """The fused Pallas dp_clip path and the clip_by_global_norm pytree
+    reference agree to float tolerance on whole trajectories (they differ
+    only in the sum-of-squares association)."""
+    _, sf, hf = runner(4)
+    _, st, ht = runner(4, clip_path="tree")
+    np.testing.assert_allclose(hf["loss"], ht["loss"], rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(hf["mean_update_norm"],
+                               ht["mean_update_norm"], rtol=1e-5)
+    np.testing.assert_allclose(hf["frac_clipped"], ht["frac_clipped"],
+                               atol=1e-6)
+    assert _max_leaf_diff(sf.params, st.params) < 1e-5
+
+
+def test_streaming_matches_materializing(runner):
+    """The streamed engine reproduces the legacy materializing engine
+    (cohort_chunk=0) within float tolerance: same cohorts (bitwise
+    participation), same trajectory up to reduction association."""
+    _, ss, hs = runner(4)
+    _, sm, hm = runner(0)
+    np.testing.assert_array_equal(np.asarray(ss.participation),
+                                  np.asarray(sm.participation))
+    np.testing.assert_allclose(hs["loss"], hm["loss"], rtol=1e-5, atol=1e-6)
+    assert _max_leaf_diff(ss.params, sm.params) < 1e-5
+
+
+# --------------------------------------------------------- host round body
+
+
+def test_round_compute_matches_engine_bitwise(setup):
+    """The host round body streams through the *same* canonical association
+    as the engine: given identical batches and mask, the clipped sums and
+    stats are bit-equal — the property that keeps the host loop a true
+    reference for the engine rather than an approximation."""
+    _, model, ds = setup
+    dp = DPConfig(clients_per_round=16, noise_multiplier=0.0, clip_norm=0.8)
+    cl = ClientConfig(local_epochs=1, batch_size=10, lr=0.3)
+    eng = SimEngine(model, ds.to_device_arrays(), dp, cl, n_local_batches=2,
+                    availability=0.6, cohort_chunk=2)
+    params = model.init(jax.random.PRNGKey(1))
+    ids = jnp.arange(16)
+    keys = jax.random.split(jax.random.PRNGKey(3), 16)
+    mask = jnp.ones(16)
+    batches = gather_client_batches(eng.examples, eng.counts, ids, keys,
+                                    2, 10)
+    total_e, scal_e = jax.jit(
+        lambda p: eng._cohort_sums(p, ids, keys, mask))(params)
+    total_h, mean_norm, _, loss = jax.jit(
+        lambda p: round_compute(model, p, batches, cl, dp, mask=mask,
+                                cohort_chunk=2))(params)
+    assert _max_leaf_diff(total_e, total_h) == 0.0
+    assert float(mean_norm) == float(scal_e[0] / 16)
+    assert float(loss) == float(scal_e[2] / 16)
+
+
+def test_round_compute_chunk_parity_and_reference(setup):
+    """round_compute is chunk-size-invariant bitwise (a non-dividing request
+    resolves leniently — the host's realized round size varies), and the
+    streamed result matches the legacy materializing body to tolerance.
+    C=11 exercises the pad-to-canonical-grid path (pad slots alias slot 0
+    under a zero mask)."""
+    _, model, ds = setup
+    dp = DPConfig(clients_per_round=16, noise_multiplier=0.0, clip_norm=0.8)
+    cl = ClientConfig(local_epochs=1, batch_size=10, lr=0.3)
+    eng = SimEngine(model, ds.to_device_arrays(), dp, cl, n_local_batches=2,
+                    availability=0.6)
+    params = model.init(jax.random.PRNGKey(1))
+    keys = jax.random.split(jax.random.PRNGKey(3), 11)
+    batches = gather_client_batches(eng.examples, eng.counts,
+                                    jnp.arange(11), keys, 2, 10)
+    outs = {}
+    for chunk in (1, 2, 16, 0):   # 11 pads to 16 → block size 2
+        outs[chunk] = jax.jit(
+            lambda p, c=chunk: round_compute(model, p, batches, cl, dp,
+                                             cohort_chunk=c))(params)
+    for chunk in (1, 16):
+        assert _max_leaf_diff(outs[2][0], outs[chunk][0]) == 0.0
+        for i in (1, 2, 3):
+            assert float(outs[2][i]) == float(outs[chunk][i])
+    np.testing.assert_allclose(np.asarray(outs[2][1]),
+                               np.asarray(outs[0][1]), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(outs[2][3]),
+                               np.asarray(outs[0][3]), rtol=1e-5)
+    assert _max_leaf_diff(outs[2][0], outs[0][0]) < 1e-5
+
+
+def test_streamed_clip_matches_clip_by_global_norm(setup):
+    """One client through the fused streaming accumulator == that client's
+    clip_by_global_norm result (the validated reference), to tolerance."""
+    _, model, ds = setup
+    cl = ClientConfig(local_epochs=1, batch_size=10, lr=0.3)
+    eng_data = ds.to_device_arrays()
+    examples = jnp.asarray(eng_data["examples"])
+    counts = jnp.asarray(eng_data["counts"])
+    params = model.init(jax.random.PRNGKey(1))
+    keys = jax.random.split(jax.random.PRNGKey(3), 2)
+    batches = gather_client_batches(examples, counts, jnp.arange(2), keys,
+                                    2, 10)
+    deltas, losses = jax.jit(
+        lambda p: local_deltas(model, p, batches, cl))(params)
+    acc0 = jax.tree_util.tree_map(
+        lambda l: jnp.zeros(l.shape, jnp.float32), params)
+    (upd, stats) = jax.jit(
+        lambda d: chunk_accumulate((acc0, jnp.zeros(4)), d, losses,
+                                   jnp.array([1.0, 0.0]), 0.8))(deltas)
+    one = jax.tree_util.tree_map(lambda l: l[0], deltas)
+    clipped, norm, flag = clip_by_global_norm(one, 0.8)
+    assert _max_leaf_diff(upd, clipped) < 1e-6
+    np.testing.assert_allclose(float(stats[0]), float(norm), rtol=1e-6)
+    assert float(stats[3]) == 1.0
+
+
+# ------------------------------------------------------- knobs / plumbing
+
+
+def test_invalid_chunk_and_clip_path_raise(setup):
+    """Non-dividing chunk sizes and unknown clip paths fail loudly at
+    construction, naming the valid values."""
+    _, model, ds = setup
+    dp = DPConfig(clients_per_round=COHORT, noise_multiplier=0.0,
+                  clip_norm=0.8)
+    cl = ClientConfig(local_epochs=1, batch_size=10, lr=0.3)
+    data = ds.to_device_arrays()
+    with pytest.raises(ValueError, match="divide the canonical block"):
+        SimEngine(model, data, dp, cl, cohort_chunk=3)   # block size 4
+    with pytest.raises(ValueError, match="clip_path"):
+        SimEngine(model, data, dp, cl, clip_path="nope")
+
+
+def test_resolve_and_auto_chunk():
+    """Chunk resolution: auto picks the largest divisor ≤ the cap; strict
+    mode rejects non-divisors; lenient mode rounds down to a divisor."""
+    assert auto_chunk(4) == 4
+    assert auto_chunk(125) == 25
+    assert auto_chunk(625) == 25
+    assert auto_chunk(7) == 7 and auto_chunk(7, max_chunk=3) == 1
+    assert resolve_chunk(None, 125) == 25
+    assert resolve_chunk(5, 125) == 5
+    assert resolve_chunk(0, 125) == 0       # materializing-path sentinel
+    assert resolve_chunk(100, 125, strict=False) == 25
+    with pytest.raises(ValueError, match="valid values"):
+        resolve_chunk(100, 125)
+    with pytest.raises(ValueError, match="divide"):
+        resolve_chunk(-1, 4, strict=False)
+
+
+def test_trainer_chunk_plumbing(setup):
+    """FederatedTrainer forwards cohort_chunk to both backends; engine
+    trajectories stay bit-identical across chunk sizes end to end."""
+    _, model, ds = setup
+    dp = DPConfig(clients_per_round=12, noise_multiplier=0.0, clip_norm=0.8,
+                  server_opt="momentum", server_lr=0.5, server_momentum=0.9)
+    cl = ClientConfig(local_epochs=1, batch_size=10, lr=0.3)
+    losses = {}
+    for chunk in (1, 2):    # cohort 12 pads to 16 → block size 2
+        tr = FederatedTrainer(model, ds, dp, cl, n_local_batches=2, seed=0,
+                              backend="engine", rounds_per_call=2,
+                              cohort_chunk=chunk)
+        tr.train(2)
+        losses[chunk] = [r["loss"] for r in tr.state.history]
+    assert losses[1] == losses[2]
+    # host backend accepts the knob too (chunk re-resolves per round shape)
+    tr = FederatedTrainer(model, ds, dp, cl, n_local_batches=2, seed=0,
+                          backend="host", cohort_chunk=2)
+    tr.train(1)
+    assert tr.state.history[-1]["n_clients"] > 0
+    assert np.isfinite(tr.state.history[-1]["loss"])

@@ -42,6 +42,59 @@ def test_clip_accumulate_sweep(clip):
             1.0 + f * np.asarray(tree[k]), rtol=1e-5, atol=1e-6)
 
 
+def test_clip_accumulate_scale():
+    """The optional scale (the streaming engine's 0/1 slot mask) multiplies
+    the clip factor: scale=0 leaves the accumulator bitwise untouched,
+    scale=s accumulates s·factor·Δ."""
+    tree = {"a": jax.random.normal(KEY, (40, 9))}
+    acc = jax.tree_util.tree_map(jnp.ones_like, tree)
+    masked, norm = clip_accumulate(acc, tree, 0.5, jnp.zeros(()))
+    np.testing.assert_array_equal(np.asarray(masked["a"]),
+                                  np.asarray(acc["a"]))
+    np.testing.assert_allclose(float(norm),
+                               float(jnp.sqrt(sumsq_ref(tree["a"]))),
+                               rtol=1e-6)
+    half, norm = clip_accumulate(acc, tree, 0.5, jnp.full((), 0.5))
+    f = 0.5 * float(clip_factor_ref(jnp.square(norm), 0.5))
+    np.testing.assert_allclose(np.asarray(half["a"]),
+                               1.0 + f * np.asarray(tree["a"]),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_dp_clip_interpret_autoselect():
+    """interpret=None auto-selects by backend: on a non-TPU backend the
+    kernels run through the Pallas interpreter and must agree with the
+    explicit interpret=True result bitwise."""
+    from repro.kernels.dp_clip import dp_clip as K
+    assert K.default_interpret() == (jax.default_backend() != "tpu")
+    x = jax.random.normal(KEY, (2 * K.ROWS, K.LANES))
+    if K.default_interpret():
+        assert float(K.sumsq(x)) == float(K.sumsq(x, interpret=True))
+    tree = {"x": x}
+    auto, _ = clip_accumulate({"x": jnp.zeros_like(x)}, tree, 1.0)
+    forced, _ = clip_accumulate({"x": jnp.zeros_like(x)}, tree, 1.0,
+                                interpret=K.default_interpret())
+    np.testing.assert_array_equal(np.asarray(auto["x"]),
+                                  np.asarray(forced["x"]))
+
+
+def test_dp_clip_rejects_untiled_shapes():
+    """Ragged (non-TILE-multiple) inputs must fail loudly at trace time —
+    the grid sweep would silently misread the last block otherwise."""
+    from repro.kernels.dp_clip import dp_clip as K
+    good = jnp.zeros((K.ROWS, K.LANES))
+    for bad in (jnp.zeros((K.ROWS + 1, K.LANES)),      # ragged sublane
+                jnp.zeros((K.ROWS, K.LANES - 1)),      # wrong lane dim
+                jnp.zeros((K.ROWS * K.LANES,))):       # not 2-D
+        with pytest.raises(ValueError, match="tile layout"):
+            K.sumsq(bad)
+        with pytest.raises(ValueError, match="tile layout"):
+            K.clip_accumulate_2d(bad, bad, jnp.ones(()))
+    with pytest.raises(ValueError, match="share one tile layout"):
+        K.clip_accumulate_2d(good, jnp.zeros((2 * K.ROWS, K.LANES)),
+                             jnp.ones(()))
+
+
 # ----------------------------- flash attention ------------------------------
 
 
