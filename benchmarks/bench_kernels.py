@@ -7,6 +7,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit, timed
+from repro.kernels.cifg_cell import cifg_cell_ref, cifg_step
 from repro.kernels.dp_clip.ops import clip_accumulate
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
@@ -16,7 +17,45 @@ from repro.kernels.ssd_scan.ref import ssd_scan_ref
 KEY = jax.random.PRNGKey(0)
 
 
+def _cifg_cell_bench():
+    """Paper-scale CIFG recurrent step (B=50, d=96, h=256): fused Pallas
+    cell (interpret on CPU) vs the post-split jnp reference vs the pre-split
+    XLA cell (concat + fused w_gates — the PR-4 compute graph)."""
+    B, d, h = 50, 96, 256
+    ks = jax.random.split(KEY, 5)
+    zx = jax.random.normal(ks[0], (B, 3 * h))
+    hs = jax.random.normal(ks[1], (B, h)) * 0.3
+    cs = jax.random.normal(ks[2], (B, h)) * 0.3
+    wh = jax.random.normal(ks[3], (h, 3 * h)) * 0.1
+    x = jax.random.normal(ks[4], (B, d))
+    wg = jnp.concatenate(  # pre-split layout: (d+h, 3h)
+        [jax.random.normal(ks[0], (d, 3 * h)) * 0.1, wh], axis=0)
+    b = jnp.zeros((3 * h,))
+
+    def presplit_cell(x, hs, cs):
+        z = jnp.concatenate([x, hs], axis=-1) @ wg + b
+        f = jax.nn.sigmoid(z[:, :h] + 1.0)
+        o = jax.nn.sigmoid(z[:, h:2 * h])
+        g = jnp.tanh(z[:, 2 * h:])
+        c_new = f * cs + (1.0 - f) * g
+        return o * jnp.tanh(c_new), c_new
+
+    fused = jax.jit(lambda zx, hs, cs: cifg_step(zx, hs, cs, wh))
+    ref = jax.jit(lambda zx, hs, cs: cifg_cell_ref(zx, hs, cs, wh))
+    pre = jax.jit(presplit_cell)
+    _, us_fused = timed(lambda: jax.block_until_ready(fused(zx, hs, cs)),
+                        repeats=20)
+    _, us_ref = timed(lambda: jax.block_until_ready(ref(zx, hs, cs)),
+                      repeats=20)
+    _, us_pre = timed(lambda: jax.block_until_ready(pre(x, hs, cs)),
+                      repeats=20)
+    emit("kernel/cifg_cell_step", us_fused,
+         f"jnp_ref_us={us_ref:.0f};presplit_xla_us={us_pre:.0f};"
+         "note=interpret_mode_cpu;presplit_includes_input_proj")
+
+
 def run():
+    _cifg_cell_bench()
     # dp_clip on a ~1.3M-param tree (the paper's model size)
     tree = {"a": jax.random.normal(KEY, (10_000, 96)),
             "b": jax.random.normal(jax.random.fold_in(KEY, 1), (96, 3000))}

@@ -26,18 +26,26 @@ whole {1, 2, 4, 8} grid.
 
 ``--chunk-sweep`` benchmarks the *streaming* cohort accumulation
 (`SimEngine(cohort_chunk=…)`) at cohorts {200, 1000, 5000}: for each chunk
-size it emits rounds/sec AND the compiled round program's peak live-buffer
-bytes (``jax.jit(...).lower().compile().memory_analysis()
-.temp_size_in_bytes``) — the memory/throughput trajectory the streaming
-path exists for. ``chunk=0`` is the materializing baseline; when its
-estimated peak exceeds ``BENCH_MEM_RUN_LIMIT`` bytes (default 2 GB) the
-record keeps the memory number but skips the timed run rather than
-swapping the box.
+size it emits steady-state rounds/sec (compile time split out into
+``compile_s``, two warm-up calls before the timer), the compiled round
+program's peak live-buffer bytes (``jax.jit(...).lower().compile()
+.memory_analysis().temp_size_in_bytes``), and the resolved chunk
+(``auto=1`` marks `reduction.auto_chunk`'s own choice) — the
+memory/throughput trajectory the streaming path exists for. ``chunk=0`` is
+the materializing baseline; when its estimated peak exceeds
+``BENCH_MEM_RUN_LIMIT`` bytes (default 2 GB) the record keeps the memory
+number but skips the timed run rather than swapping the box.
+
+``--client-step`` (also emitted after every full/dry run) is the
+local-SGD *numerator* microbench: µs per jit'd client step
+(``value_and_grad`` of the model loss on one client batch) per
+``cell_path`` — the unit the PR-5 time-fused CIFG client step optimizes,
+tracked per PR via the CI smoke.
 
     PYTHONPATH=src python benchmarks/bench_sim_engine.py [--dry-run]
 
 ``--dry-run`` shrinks cohorts/rounds to a seconds-long CI smoke (including
-one streaming-vs-materializing chunk record).
+one streaming-vs-materializing chunk record and the client-step records).
 """
 from __future__ import annotations
 
@@ -90,24 +98,39 @@ def _chunk_record(model, data, dp, cl, *, cohort, chunk, rounds, k,
     """One streaming-accumulation record: build the engine at this
     ``cohort_chunk``, read the compiled k-round program's peak live-buffer
     bytes, then (if it fits under MEM_RUN_LIMIT) time actual rounds through
-    the same AOT executable — one compile per record. Returns (peak_bytes,
-    rounds_per_sec — NaN when the run was skipped)."""
+    the same AOT executable — one compile per record.
+
+    Compile time and steady state are reported *separately* (``compile_s``
+    vs ``rounds_per_sec``; two warm-up calls run before the timer starts):
+    the PR-4 sweep timed a single post-warmup window per record, which let
+    first-call effects (lazy allocation, cache-cold sweeps of the chunk's
+    working set) masquerade as steady-state throughput and made the
+    cohort-5000 trajectory look non-monotone in the chunk size. The record
+    also carries ``resolved_chunk`` and ``auto=1`` when ``chunk=None`` so
+    regressions of `reduction.auto_chunk`'s choice are visible in the
+    archive. Returns (peak_bytes, rounds_per_sec — NaN when the run was
+    skipped)."""
     eng = SimEngine(model, data, dp, cl, n_local_batches=2, availability=0.5,
                     rounds_per_call=k, cohort_chunk=chunk)
     state = eng.init_state(model.init(jax.random.PRNGKey(1)), seed=0)
+    t0 = time.perf_counter()
     compiled = eng._run_k(k).lower(state).compile()
+    compile_s = time.perf_counter() - t0
     peak = compiled.memory_analysis().temp_size_in_bytes
     rps = float("nan")
     if peak <= MEM_RUN_LIMIT:
-        state, _ = compiled(state)                # warm-up call
+        for _ in range(2):                        # warm-up calls
+            state, _ = compiled(state)
         n_calls = max(1, rounds // k)
         t0 = time.perf_counter()
         for _ in range(n_calls):
             state, _ = compiled(state)
         jax.block_until_ready(state.params)
         rps = n_calls * k / (time.perf_counter() - t0)
-    derived = (f"rounds_per_sec={rps:.3f};peak_bytes={peak};"
-               f"resolved_chunk={eng.cohort_chunk}")
+    derived = (f"rounds_per_sec={rps:.3f};compile_s={compile_s:.1f};"
+               f"peak_bytes={peak};resolved_chunk={eng.cohort_chunk}")
+    if chunk is None:
+        derived += ";auto=1"
     if mem_baseline and peak:
         derived += f";mem_reduction_vs_materialize={mem_baseline / peak:.1f}x"
     if math.isnan(rps):
@@ -118,6 +141,42 @@ def _chunk_record(model, data, dp, cl, *, cohort, chunk, rounds, k,
          f"{'materialize' if chunk == 0 else eng.cohort_chunk}",
          0.0 if math.isnan(rps) else 1e6 / rps, derived)
     return peak, rps
+
+
+def client_step_bench(dry_run: bool = False):
+    """Client-step microbench: µs per client local-SGD step (jit'd
+    ``value_and_grad`` of the model loss on one client batch) at the bench
+    model config — the engine hot path's unit of work, tracked per PR in
+    ``BENCH_ci.json`` so regressions on the local-SGD numerator are visible
+    without waiting for the full cohort sweep. Emits one record per
+    ``cell_path`` (the resolved default plus the pre-PR-5-style reference
+    scan)."""
+    import jax.numpy as jnp
+
+    from repro.models.lstm import resolve_cell_path
+
+    B, S = ClientConfig().batch_size, 16
+    repeats = 5 if dry_run else 30
+    cfg0, _, _ = _setup(50)
+    for path in ("auto", "ref"):
+        cfg = cfg0.with_(cell_path=path)
+        model = build(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S + 1), 0,
+                                    cfg.vocab)
+        batch = {"tokens": tokens[:, :-1], "labels": tokens[:, 1:],
+                 "mask": jnp.ones((B, S), jnp.float32)}
+        step = jax.jit(jax.value_and_grad(model.loss_fn))
+        out = step(params, batch)
+        jax.block_until_ready(out)
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            out = step(params, batch)
+        jax.block_until_ready(out)
+        us = (time.perf_counter() - t0) / repeats * 1e6
+        emit(f"client_step/local_sgd/cell={path}", us,
+             f"resolved={resolve_cell_path(cfg)};B={B};S={S};"
+             f"d={cfg.d_model};h={cfg.d_ff}")
 
 
 def chunk_sweep(dry_run: bool = False):
@@ -231,10 +290,18 @@ if __name__ == "__main__":
                          "above the visible device count are skipped)")
     ap.add_argument("--chunk-sweep", action="store_true",
                     help="sweep cohort_chunk at cohorts {200, 1000, 5000}: "
-                         "rounds/sec + peak live-buffer bytes per record")
+                         "rounds/sec (steady-state, compile split out) + "
+                         "peak live-buffer bytes per record")
+    ap.add_argument("--client-step", action="store_true",
+                    help="only the client-step microbench (µs per local-SGD "
+                         "step, per cell_path)")
     args = ap.parse_args()
-    if not args.chunk_sweep:
-        run(dry_run=args.dry_run,
-            shards=tuple(int(s) for s in args.shards.split(",") if s))
-    if args.chunk_sweep or args.dry_run:
-        chunk_sweep(dry_run=args.dry_run)
+    if args.client_step:
+        client_step_bench(dry_run=args.dry_run)
+    else:
+        if not args.chunk_sweep:
+            run(dry_run=args.dry_run,
+                shards=tuple(int(s) for s in args.shards.split(",") if s))
+        if args.chunk_sweep or args.dry_run:
+            chunk_sweep(dry_run=args.dry_run)
+        client_step_bench(dry_run=args.dry_run)

@@ -50,6 +50,12 @@ class ModelConfig:
     tie_embeddings: bool = True
     act: str = "swiglu"         # swiglu | gelu
     norm: str = "rmsnorm"       # rmsnorm | layernorm
+    # lstm: recurrence implementation — "fused" = time-fused sequence op
+    # stepping the Pallas cifg_cell kernel, "seq" = the same sequence op
+    # with the jnp cell, "ref" = plain scan + jax autodiff (the validated
+    # reference), "auto" = fused on TPU / seq elsewhere. The hoisted input
+    # GEMM applies to every path (see repro.models.lstm).
+    cell_path: str = "auto"
     # numerics
     param_dtype: str = "float32"
     compute_dtype: str = "bfloat16"

@@ -1,0 +1,141 @@
+"""Pallas TPU kernels for the CIFG-LSTM recurrent cell — the client-step
+hot spot of the DP-FedAvg simulation (local SGD runs this cell S times per
+batch, forward *and* backward, for every client in the cohort).
+
+After the PR-5 param split the input projection ``zx = x @ w_x + b`` is
+hoisted out of the time scan (one large h-independent GEMM over all
+timesteps), so the only per-step work left is ``z = zx_t + h @ w_h`` plus
+the gate nonlinearities and the state update. Done as separate XLA ops that
+is four HBM round-trips of the (B, 3H) gate block per step; these kernels
+fuse the whole step — three small MXU matmuls plus the VPU gate math —
+into one VMEM-resident pass, and the backward kernel fuses the
+recompute-and-accumulate reverse step the same way.
+
+Layout: the three CIFG gate blocks ``[f | o | g]`` are carried as a stacked
+leading axis — ``zx3 (3, B, H)``, ``wh3 (3, H, H)`` — so every operand's
+minor two dims are plain ``(rows, H)`` tiles: ``H`` a multiple of 128
+(lanes), rows a multiple of 8 (sublanes). `ops.cifg_step` is the supported
+padding/packing path; ragged shapes fail loudly here.
+
+``interpret=None`` (default) auto-selects per backend: compiled Pallas on
+TPU, the Pallas interpreter elsewhere — same policy as `kernels.dp_clip`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANES = 128   # minor-most dim: H padded to a multiple of this
+SUBLANES = 8  # second-minor dim: batch rows padded to a multiple of this
+
+
+def default_interpret() -> bool:
+    """Backend auto-select: real Pallas on TPU, interpreter elsewhere."""
+    return jax.default_backend() != "tpu"
+
+
+def _check_cell(name: str, zx3, wh3, h, c) -> None:
+    """The kernels run one un-gridded VMEM block per call — a ragged
+    operand would violate the (8, 128) tile constraints on TPU. Fail
+    loudly at trace time (`ops.cifg_step` is the supported padding path)."""
+    B, H = h.shape[-2:] if h.ndim >= 2 else (0, 0)
+    ok = (h.ndim == 2 and c.shape == h.shape
+          and zx3.shape == (3, B, H) and wh3.shape == (3, H, H)
+          and B % SUBLANES == 0 and H % LANES == 0)
+    if not ok:
+        raise ValueError(
+            f"{name}: operands must be the packed gate layout zx3 (3, B, H),"
+            f" wh3 (3, H, H), h/c (B, H) with B % {SUBLANES} == 0 and "
+            f"H % {LANES} == 0 (see repro.kernels.cifg_cell.ops.cifg_step "
+            f"for the padding path) — got zx3 {tuple(zx3.shape)}, wh3 "
+            f"{tuple(wh3.shape)}, h {tuple(h.shape)}, c {tuple(c.shape)}")
+
+
+def _gates(zx3, wh3, h, c):
+    """Shared fwd recompute: returns (f, o, g, c_new, tanh(c_new))."""
+    cd = wh3.dtype
+    hc = h.astype(cd)
+    zf = zx3[0] + jnp.dot(hc, wh3[0], preferred_element_type=jnp.float32)
+    zo = zx3[1] + jnp.dot(hc, wh3[1], preferred_element_type=jnp.float32)
+    zg = zx3[2] + jnp.dot(hc, wh3[2], preferred_element_type=jnp.float32)
+    f = jax.nn.sigmoid(zf + 1.0)                # forget-bias 1
+    o = jax.nn.sigmoid(zo)
+    g = jnp.tanh(zg)
+    c_new = f * c + (1.0 - f) * g               # CIFG: i = 1 − f
+    return f, o, g, c_new, jnp.tanh(c_new)
+
+
+def _fwd_kernel(zx3_ref, wh3_ref, h_ref, c_ref, h_out, c_out):
+    _, o, _, c_new, t = _gates(zx3_ref[...], wh3_ref[...],
+                               h_ref[...], c_ref[...])
+    h_out[...] = o * t
+    c_out[...] = c_new
+
+
+def cell_fwd(zx3, wh3, h, c, *, interpret=None):
+    """Fused CIFG step on the packed gate layout → (h_new, c_new) f32."""
+    _check_cell("cell_fwd", zx3, wh3, h, c)
+    if interpret is None:
+        interpret = default_interpret()
+    out = jax.ShapeDtypeStruct(h.shape, jnp.float32)
+    return pl.pallas_call(
+        _fwd_kernel,
+        in_specs=[pl.BlockSpec(memory_space=pltpu.VMEM)] * 4,
+        out_specs=(pl.BlockSpec(memory_space=pltpu.VMEM),) * 2,
+        out_shape=(out, out),
+        interpret=interpret,
+    )(zx3, wh3, h, c)
+
+
+def _bwd_kernel(zx3_ref, wh3_ref, h_ref, c_ref, dh_ref, dc_ref,
+                dzx3_out, dh_out, dc_out, dwh3_out):
+    zx3, wh3 = zx3_ref[...], wh3_ref[...]
+    h, c = h_ref[...], c_ref[...]
+    dh_new, dc_new = dh_ref[...], dc_ref[...]
+    f, o, g, _, t = _gates(zx3, wh3, h, c)
+    do = dh_new * t
+    dct = dc_new + dh_new * o * (1.0 - t * t)   # ∂L/∂c_new (total)
+    dzf = dct * (c - g) * f * (1.0 - f)
+    dzo = do * o * (1.0 - o)
+    dzg = dct * (1.0 - f) * (1.0 - g * g)
+    dzx3_out[0, :, :] = dzf
+    dzx3_out[1, :, :] = dzo
+    dzx3_out[2, :, :] = dzg
+    cd = wh3.dtype
+    # dh = Σ_k dz_k @ wh_k^T — contract the gate-output dim of both operands
+    tr = (((1,), (1,)), ((), ()))
+    dh_out[...] = sum(
+        jax.lax.dot_general(dz.astype(cd), wh3[k], tr,
+                            preferred_element_type=jnp.float32)
+        for k, dz in enumerate((dzf, dzo, dzg)))
+    dc_out[...] = dct * f
+    # dwh_k = h^T @ dz_k — contract the batch dim of both operands
+    bt = (((0,), (0,)), ((), ()))
+    hc = h.astype(cd)
+    for k, dz in enumerate((dzf, dzo, dzg)):
+        dwh3_out[k, :, :] = jax.lax.dot_general(
+            hc, dz.astype(cd), bt, preferred_element_type=jnp.float32)
+
+
+def cell_bwd(zx3, wh3, h, c, dh_new, dc_new, *, interpret=None):
+    """Fused reverse step: recompute the gates, return
+    (dzx3 (3,B,H), dh (B,H), dc (B,H), dwh3 (3,H,H)) in f32."""
+    _check_cell("cell_bwd", zx3, wh3, h, c)
+    if dh_new.shape != h.shape or dc_new.shape != c.shape:
+        raise ValueError(
+            f"cell_bwd: cotangents must match the state shape "
+            f"{tuple(h.shape)}, got dh {tuple(dh_new.shape)}, "
+            f"dc {tuple(dc_new.shape)}")
+    if interpret is None:
+        interpret = default_interpret()
+    st = jax.ShapeDtypeStruct(h.shape, jnp.float32)
+    return pl.pallas_call(
+        _bwd_kernel,
+        in_specs=[pl.BlockSpec(memory_space=pltpu.VMEM)] * 6,
+        out_specs=(pl.BlockSpec(memory_space=pltpu.VMEM),) * 4,
+        out_shape=(jax.ShapeDtypeStruct(zx3.shape, jnp.float32), st, st,
+                   jax.ShapeDtypeStruct(wh3.shape, jnp.float32)),
+        interpret=interpret,
+    )(zx3, wh3, h, c, dh_new, dc_new)

@@ -1,0 +1,261 @@
+"""jit-friendly wrapper: the fused CIFG recurrent step with a custom VJP.
+
+``cifg_step(zx, h, c, w_h)`` takes the model's natural shapes — ``zx``
+``(B, 3H)`` (the timestep's slice of the hoisted input projection
+``x @ w_x + b_gates``), state ``h``/``c`` ``(B, H)``, and the recurrent
+matrix ``w_h (H, 3H)`` — packs the three gate blocks into the kernels'
+stacked layout, pads ``B``/``H`` up to the (8, 128) tile grid, and runs the
+fused Pallas forward; the backward pass runs the fused recompute kernel
+(`cifg_cell.cell_bwd`) via ``jax.custom_vjp``, so local SGD's gradient
+step stays on the fused path too.
+
+Padding is exact: padded ``h``/``c`` columns and ``w_h`` rows are zero, so
+real gate columns see unchanged matmul results, and padded batch rows have
+zero cotangents in the backward, so they contribute nothing to ``dw_h``.
+
+``interpret=None`` auto-selects per backend (compiled Pallas on TPU, the
+Pallas interpreter elsewhere); both the op and its VJP batch cleanly under
+``vmap`` (the engine vmaps the client chunk axis over the whole loss
+gradient) and compose with ``jax.checkpoint`` (the model's ``remat`` knob).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.cifg_cell import cifg_cell as K
+
+
+def _round_up(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+def _pack_gates(a, hidden: int, rows_pad: int, lanes_pad: int):
+    """(rows, 3H) → (3, rows_pad, lanes_pad): split the packed gate axis
+    into a stacked leading dim and zero-pad the minor tile dims."""
+    rows = a.shape[0]
+    a3 = a.reshape(rows, 3, hidden).transpose(1, 0, 2)
+    return jnp.pad(a3, ((0, 0), (0, rows_pad - rows),
+                        (0, lanes_pad - hidden)))
+
+
+def _unpack_gates(a3, rows: int, hidden: int):
+    """(3, rows_pad, lanes_pad) → (rows, 3H): inverse of `_pack_gates`."""
+    return a3[:, :rows, :hidden].transpose(1, 0, 2).reshape(rows, 3 * hidden)
+
+
+def _pad2(a, rows_pad: int, lanes_pad: int):
+    return jnp.pad(a, ((0, rows_pad - a.shape[0]),
+                       (0, lanes_pad - a.shape[1])))
+
+
+def _prep(zx, h, c, w_h, compute_dtype):
+    B, H = h.shape
+    Bp, Hp = _round_up(B, K.SUBLANES), _round_up(H, K.LANES)
+    cd = jnp.dtype(compute_dtype) if compute_dtype is not None else w_h.dtype
+    zx3 = _pack_gates(zx.astype(jnp.float32), H, Bp, Hp)
+    wh3 = _pack_gates(w_h, H, Hp, Hp).astype(cd)
+    hp = _pad2(h.astype(jnp.float32), Bp, Hp)
+    cp = _pad2(c.astype(jnp.float32), Bp, Hp)
+    return zx3, wh3, hp, cp
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+def _cifg_step(zx, h, c, w_h, compute_dtype, interpret):
+    B, H = h.shape
+    zx3, wh3, hp, cp = _prep(zx, h, c, w_h, compute_dtype)
+    hn, cn = K.cell_fwd(zx3, wh3, hp, cp, interpret=interpret)
+    return hn[:B, :H], cn[:B, :H]
+
+
+def _cifg_step_fwd(zx, h, c, w_h, compute_dtype, interpret):
+    return (_cifg_step(zx, h, c, w_h, compute_dtype, interpret),
+            (zx, h, c, w_h))
+
+
+def _cifg_step_bwd(compute_dtype, interpret, res, grads):
+    zx, h, c, w_h = res
+    dh_new, dc_new = grads
+    B, H = h.shape
+    Bp, Hp = _round_up(B, K.SUBLANES), _round_up(H, K.LANES)
+    zx3, wh3, hp, cp = _prep(zx, h, c, w_h, compute_dtype)
+    dhp = _pad2(dh_new.astype(jnp.float32), Bp, Hp)
+    dcp = _pad2(dc_new.astype(jnp.float32), Bp, Hp)
+    dzx3, dh, dc, dwh3 = K.cell_bwd(zx3, wh3, hp, cp, dhp, dcp,
+                                    interpret=interpret)
+    return (_unpack_gates(dzx3, B, H).astype(zx.dtype),
+            dh[:B, :H].astype(h.dtype), dc[:B, :H].astype(c.dtype),
+            _unpack_gates(dwh3, H, H).astype(w_h.dtype))
+
+
+_cifg_step.defvjp(_cifg_step_fwd, _cifg_step_bwd)
+
+
+# ---------------------------------------------------------------- sequence
+
+
+def _seq_scan(zx, h0, c0, w_h, cell: str, cd, interpret):
+    """Run the forward recurrence over the whole sequence.
+
+    zx: (S, B, 3H) f32 time-major hoisted input projections; returns the full
+    state stacks (hs, cs), each (S, B, H) f32. ``cell="fused"`` steps through
+    the Pallas `cifg_cell.cell_fwd` kernel with the tile padding done *once*
+    outside the scan; ``cell="seq"`` steps through the pure-jnp reference
+    cell."""
+    from repro.kernels.cifg_cell.ref import cifg_cell_ref
+
+    S, B, threeH = zx.shape
+    H = threeH // 3
+    if cell == "fused":
+        Bp, Hp = _round_up(B, K.SUBLANES), _round_up(H, K.LANES)
+        cdt = jnp.dtype(cd) if cd is not None else w_h.dtype
+        zx3 = jax.vmap(lambda a: _pack_gates(a, H, Bp, Hp))(
+            zx.astype(jnp.float32))                       # (S, 3, Bp, Hp)
+        wh3 = _pack_gates(w_h, H, Hp, Hp).astype(cdt)
+        hp = _pad2(h0.astype(jnp.float32), Bp, Hp)
+        cp = _pad2(c0.astype(jnp.float32), Bp, Hp)
+
+        def step(carry, zx3_t):
+            h, c = K.cell_fwd(zx3_t, wh3, carry[0], carry[1],
+                              interpret=interpret)
+            return (h, c), (h, c)
+
+        _, (hs, cs) = jax.lax.scan(step, (hp, cp), zx3)
+        return hs[:, :B, :H], cs[:, :B, :H]
+
+    def step(carry, zx_t):
+        h, c = cifg_cell_ref(zx_t, carry[0], carry[1], w_h, compute_dtype=cd)
+        return (h, c), (h, c)
+
+    _, (hs, cs) = jax.lax.scan(step, (h0, c0), zx)
+    return hs, cs
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
+def _cifg_sequence(zx, h0, c0, w_h, cell, cd, remat, interpret):
+    hs, cs = _seq_scan(zx, h0, c0, w_h, cell, cd, interpret)
+    return hs, (hs[-1], cs[-1])
+
+
+def _cifg_sequence_fwd(zx, h0, c0, w_h, cell, cd, remat, interpret):
+    hs, cs = _seq_scan(zx, h0, c0, w_h, cell, cd, interpret)
+    saved = None if remat else (hs, cs)
+    return (hs, (hs[-1], cs[-1])), (zx, h0, c0, w_h, saved)
+
+
+def _cifg_sequence_bwd(cell, cd, remat, interpret, res, ct):
+    """Time-fused reverse pass. Everything that does not depend on the
+    sequential (dh, dc) recursion is hoisted out of the reverse scan and
+    batched over time: the gate recompute is ONE (S·B, H) @ (H, 3H) GEMM
+    plus batched elementwise factor precomputes, and the ``dw_h``
+    reduction is ONE (H, S·B) @ (S·B, 3H) GEMM after the scan. The only
+    per-step work left is the elementwise (dh, dc) update and the single
+    small ``dz @ w_h^T`` matmul. The whole reverse pass runs in f32
+    (cotangent precision is a backward-only choice — it does not touch the
+    forward trajectory)."""
+    zx, h0, c0, w_h, saved = res
+    dhs, (dhf, dcf) = ct
+    hs, cs = (saved if saved is not None
+              else _seq_scan(zx, h0, c0, w_h, cell, cd, interpret))
+    S, B, H = hs.shape
+    h_prev = jnp.concatenate([h0[None], hs[:-1]])
+    c_prev = jnp.concatenate([c0[None], cs[:-1]])
+    cdt = jnp.dtype(cd) if cd is not None else w_h.dtype
+    # batched gate recompute — one GEMM over all timesteps, accumulated in
+    # f32 (preferred_element_type) exactly like the forward cell, so the
+    # recomputed linearization point matches the forward's under bf16
+    z = zx + jnp.dot(h_prev.reshape(S * B, H).astype(cdt), w_h.astype(cdt),
+                     preferred_element_type=jnp.float32
+                     ).reshape(S, B, 3 * H)
+    f = jax.nn.sigmoid(z[..., :H] + 1.0)
+    o = jax.nn.sigmoid(z[..., H:2 * H])
+    g = jnp.tanh(z[..., 2 * H:])
+    t = jnp.tanh(cs)
+    # per-step cotangent factors, precomputed batched:
+    #   dct = dc + dh·A;  dzf = dct·Bf;  dzo = dh·Co;  dzg = dct·Dg
+    A = o * (1.0 - t * t)
+    Bf = (c_prev - g) * f * (1.0 - f)
+    Co = t * o * (1.0 - o)
+    Dg = (1.0 - f) * (1.0 - g * g)
+    whT = w_h.astype(jnp.float32).T
+
+    def rev(carry, inp):
+        dh_next, dc_next = carry
+        dhs_t, A_t, Bf_t, Co_t, Dg_t, f_t = inp
+        dh = dh_next + dhs_t
+        dct = dc_next + dh * A_t
+        dz = jnp.concatenate([dct * Bf_t, dh * Co_t, dct * Dg_t], axis=-1)
+        return (dz @ whT, dct * f_t), dz
+
+    (dh0, dc0), dz = jax.lax.scan(rev, (dhf.astype(jnp.float32),
+                                        dcf.astype(jnp.float32)),
+                                  (dhs.astype(jnp.float32), A, Bf, Co, Dg, f),
+                                  reverse=True)
+    # dw_h = Σ_t h_prev_t^T @ dz_t — one GEMM over the stacked time axis
+    dwh = jax.lax.dot_general(
+        h_prev.reshape(S * B, H), dz.reshape(S * B, 3 * H),
+        (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    return dz.astype(zx.dtype), dh0, dc0, dwh.astype(w_h.dtype)
+
+
+_cifg_sequence.defvjp(_cifg_sequence_fwd, _cifg_sequence_bwd)
+
+
+def cifg_sequence(zx, h0, c0, w_h, *, cell: str = "seq", compute_dtype=None,
+                  remat: bool = False, interpret=None):
+    """Whole-sequence CIFG recurrence with a time-fused backward.
+
+    zx: (S, B, 3H) f32 — time-major hoisted input projections
+    (``x @ w_x + b_gates`` for every timestep, one GEMM upstream);
+    h0, c0: (B, H) f32; w_h: (H, 3H). Returns ``(hs (S, B, H) f32,
+    (h_fin, c_fin))``.
+
+    ``cell`` selects the forward step: ``"fused"`` = the Pallas
+    `cifg_cell.cell_fwd` kernel (tile padding hoisted out of the scan;
+    compiled on TPU, interpreter elsewhere), ``"seq"`` = the pure-jnp cell.
+    Both share the custom time-fused VJP (`_cifg_sequence_bwd`): gate
+    recompute, cotangent factors, and the ``dw_h`` reduction are batched
+    over time outside the reverse scan, which keeps only the sequential
+    elementwise state update plus one small matmul per step. ``remat=True``
+    drops the state stacks from the residuals and recomputes them in the
+    backward (the scan-step checkpointing knob).
+    """
+    if zx.ndim != 3 or h0.ndim != 2 or c0.shape != h0.shape \
+            or zx.shape[1:] != (h0.shape[0], 3 * h0.shape[1]) \
+            or w_h.shape != (h0.shape[1], 3 * h0.shape[1]):
+        raise ValueError(
+            f"cifg_sequence: expected zx (S, B, 3H), h0/c0 (B, H), "
+            f"w_h (H, 3H) — got zx {tuple(zx.shape)}, h0 {tuple(h0.shape)}, "
+            f"c0 {tuple(c0.shape)}, w_h {tuple(w_h.shape)}")
+    if cell not in ("fused", "seq"):
+        raise ValueError(f"cell must be 'fused' or 'seq', got {cell!r}")
+    if interpret is None:
+        interpret = K.default_interpret()
+    cd = str(jnp.dtype(compute_dtype)) if compute_dtype is not None else None
+    return _cifg_sequence(zx, h0, c0, w_h, cell, cd, bool(remat),
+                          bool(interpret))
+
+
+def cifg_step(zx, h, c, w_h, *, compute_dtype=None, interpret=None):
+    """Fused CIFG recurrent step (forward + custom fused backward).
+
+    zx: (B, 3H) f32 — hoisted input projection for this timestep;
+    h, c: (B, H) f32 — previous state; w_h: (H, 3H) — recurrent matrix.
+    ``compute_dtype`` is the matmul dtype (the model's ``cfg.compute_dtype``;
+    ``None`` = ``w_h.dtype``); gate math and the state update stay f32.
+    Returns (h_new, c_new) f32 — numerically equivalent (not bit-equal) to
+    `ref.cifg_cell_ref`.
+    """
+    if zx.ndim != 2 or h.ndim != 2 or c.shape != h.shape \
+            or w_h.ndim != 2 or zx.shape != (h.shape[0], 3 * h.shape[1]) \
+            or w_h.shape != (h.shape[1], 3 * h.shape[1]):
+        raise ValueError(
+            f"cifg_step: expected zx (B, 3H), h/c (B, H), w_h (H, 3H) — got "
+            f"zx {tuple(zx.shape)}, h {tuple(h.shape)}, c {tuple(c.shape)}, "
+            f"w_h {tuple(w_h.shape)}")
+    if interpret is None:
+        interpret = K.default_interpret()
+    cd = str(jnp.dtype(compute_dtype)) if compute_dtype is not None else None
+    return _cifg_step(zx, h, c, w_h, cd, bool(interpret))

@@ -1,0 +1,38 @@
+"""Pure-jnp reference for the fused CIFG recurrent cell.
+
+This is the oracle the Pallas kernels (`cifg_cell.py` via `ops.cifg_step`)
+are validated against, and the `cell_path="ref"` model path: the post-split
+recurrent step where the input projection ``zx = x_t @ w_x + b`` has already
+been hoisted out of the time scan (it is h-independent, so all timesteps can
+be computed in one large GEMM), leaving only the small hidden-state matmul
+``h @ w_h`` plus the gate nonlinearities and state update per step.
+
+CIFG couples the input and forget gates (i = 1 − f) [SSB14], so there are
+three gate blocks packed along the last axis of ``zx`` / ``w_h``:
+``[f | o | g]``, each ``hidden`` wide.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cifg_cell_ref(zx, h, c, w_h, *, compute_dtype=None):
+    """One CIFG step given the hoisted input projection.
+
+    zx: (B, 3H) f32 — ``x_t @ w_x + b_gates`` for this timestep;
+    h, c: (B, H) f32 — previous hidden / cell state;
+    w_h: (H, 3H) — recurrent gate matrix (param dtype).
+    ``compute_dtype`` is the matmul dtype (the model's ``cfg.compute_dtype``);
+    the gate math and state update stay f32. Returns (h_new, c_new) f32.
+    """
+    cd = jnp.dtype(compute_dtype) if compute_dtype is not None else w_h.dtype
+    hidden = h.shape[-1]
+    z = zx + jnp.dot(h.astype(cd), w_h.astype(cd),
+                     preferred_element_type=jnp.float32)
+    f = jax.nn.sigmoid(z[..., :hidden] + 1.0)   # forget-bias 1
+    o = jax.nn.sigmoid(z[..., hidden:2 * hidden])
+    g = jnp.tanh(z[..., 2 * hidden:])
+    c_new = f * c + (1.0 - f) * g               # CIFG: i = 1 − f
+    h_new = o * jnp.tanh(c_new)
+    return h_new, c_new

@@ -54,6 +54,10 @@ def main():
     ap.add_argument("--steps", type=int, default=8)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--vocab", type=int, default=2000)
+    ap.add_argument("--cell-path", default=None,
+                    choices=["auto", "fused", "seq", "ref"],
+                    help="lstm recurrence implementation (decode_step runs "
+                         "the same fused Pallas cell as training)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -61,6 +65,8 @@ def main():
         cfg = cfg.reduced()
     if cfg.family == "lstm":
         cfg = cfg.with_(vocab=args.vocab)
+    if args.cell_path is not None:
+        cfg = cfg.with_(cell_path=args.cell_path)
     model = build(cfg)
     if args.ckpt:
         params, meta = checkpoint.load(args.ckpt)

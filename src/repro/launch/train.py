@@ -67,6 +67,13 @@ def main():
                     help="per-client clip→accumulate implementation: fused "
                          "Pallas dp_clip kernels (interpret mode on CPU, "
                          "compiled on TPU) or the pytree reference")
+    ap.add_argument("--cell-path", default=None,
+                    choices=["auto", "fused", "seq", "ref"],
+                    help="lstm recurrence implementation: time-fused "
+                         "sequence op with the Pallas cifg_cell kernel "
+                         "(fused) or the jnp cell (seq), plain autodiff "
+                         "scan (ref), or auto = fused on TPU / seq "
+                         "elsewhere (default: the config's cell_path)")
     ap.add_argument("--availability", type=float, default=0.3,
                     help="per-round device check-in probability; keep "
                          "availability·n_users above clients_per_round")
@@ -77,6 +84,8 @@ def main():
         cfg = cfg.reduced()
     if cfg.family == "lstm":
         cfg = cfg.with_(vocab=args.vocab)
+    if args.cell_path is not None:
+        cfg = cfg.with_(cell_path=args.cell_path)
     model = build(cfg)
 
     corpus = BigramCorpus(vocab_size=cfg.vocab, seed=args.seed)

@@ -316,9 +316,14 @@ def lm_loss(logits, labels, vocab: int, mask=None):
         pad_mask = jax.lax.broadcasted_iota(jnp.int32, (Vpad,), 0) >= vocab
         lf = jnp.where(pad_mask[None, None, :], NEG_INF, lf)
     lse = jax.nn.logsumexp(lf, axis=-1)
-    # one-hot contraction instead of take_along_axis: sharded-vocab friendly.
-    onehot = jax.nn.one_hot(labels, Vpad, dtype=jnp.float32)
-    true_logit = jnp.sum(lf * onehot, axis=-1)
+    # one-hot contraction instead of take_along_axis: sharded-vocab friendly
+    # (elementwise select + reduction over the vocab axis → partial sums +
+    # psum under GSPMD). Written as a fused where-reduce rather than
+    # materializing the one-hot and multiplying — bit-identical (the sum
+    # has exactly one nonzero term either way), one less (B,S,Vpad) pass.
+    vocab_ids = jax.lax.broadcasted_iota(jnp.int32, (Vpad,), 0)
+    true_logit = jnp.sum(
+        jnp.where(labels[..., None] == vocab_ids, lf, 0.0), axis=-1)
     nll = lse - true_logit
     if mask is None:
         return jnp.mean(nll)

@@ -4,6 +4,27 @@ with tied input-embedding/output-projection, ~1.3M parameters, 10k vocab.
 CIFG couples the input and forget gates (i = 1 − f), so there are three gate
 matrices (f, o, g). A linear projection maps the hidden state back to the
 embedding dimension so the tied embedding can produce logits.
+
+Hot-path structure (PR 5 — the time-fused client step): the gate matrix is
+split into ``w_x (d, 3h)`` and ``w_h (h, 3h)`` so the input projection for
+*all* timesteps is one large ``(B·S, d) @ (d, 3h)`` GEMM hoisted out of the
+time scan (it is h-independent); the scan step only does the small
+``h @ w_h`` matmul plus the gate nonlinearities and state update.
+``cfg.cell_path`` selects the recurrence implementation:
+
+* ``"fused"`` — `kernels.cifg_cell.cifg_sequence` with the Pallas cell
+  kernel as the per-step forward (compiled on TPU, interpreter elsewhere)
+  and the time-fused custom backward (gate recompute + ``dw_h`` reduction
+  batched over time outside the reverse scan);
+* ``"seq"`` — the same time-fused sequence op with the pure-jnp cell as
+  the per-step forward (the fast path on non-TPU backends, where the
+  Pallas interpreter would run the cell per step);
+* ``"ref"`` — the pre-split-style plain ``lax.scan`` over the jnp cell
+  with ordinary jax autodiff through the scan — the validated reference;
+* ``"auto"`` (default) — ``"fused"`` on TPU, ``"seq"`` elsewhere.
+
+Old ``w_gates`` checkpoints load through the one-shot migration shim in
+`repro.train.checkpoint`.
 """
 from __future__ import annotations
 
@@ -13,52 +34,79 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.kernels.cifg_cell import cifg_cell_ref, cifg_sequence, cifg_step
 from repro.models import layers as L
 from repro.models.api import Model
 from repro.models.embed import embed_tokens, embedding_init, lm_logits
 
+CELL_PATHS = ("auto", "fused", "seq", "ref")
+
+
+def resolve_cell_path(cfg: ModelConfig) -> str:
+    """``"auto"`` → compiled Pallas kernels on TPU, the time-fused jnp
+    sequence elsewhere (the Pallas interpreter is a correctness surrogate,
+    not a fast path — running it per scan step would dominate the client
+    step on CPU)."""
+    if cfg.cell_path != "auto":
+        return cfg.cell_path
+    return "fused" if jax.default_backend() == "tpu" else "seq"
+
 
 def init(key, cfg: ModelConfig):
-    ke, kg, kp = jax.random.split(key, 3)
+    ke, kx, kh, kp = jax.random.split(key, 4)
     d, h = cfg.d_model, cfg.d_ff  # embedding dim, hidden size
     return {
         "embed": embedding_init(ke, cfg),
-        "w_gates": L.dense_init(kg, (d + h, 3 * h), in_dim=d + h),
+        # split gate matrices — fan-in matches the fused (d+h, 3h) matrix
+        # they replace, so init statistics are unchanged by the layout
+        "w_x": L.dense_init(kx, (d, 3 * h), in_dim=d + h),
+        "w_h": L.dense_init(kh, (h, 3 * h), in_dim=d + h),
         "b_gates": jnp.zeros((3 * h,), jnp.float32),
         "w_proj": L.dense_init(kp, (h, d), in_dim=h),
     }
 
 
-def _cell(params, x_t, h, c, hidden: int):
-    """One CIFG step. x_t: (B, d); h, c: (B, hidden)."""
-    cd = x_t.dtype
-    z = jnp.concatenate([x_t, h.astype(cd)], axis=-1) @ params["w_gates"].astype(cd)
-    z = z.astype(jnp.float32) + params["b_gates"]
-    f = jax.nn.sigmoid(z[:, :hidden] + 1.0)   # forget-bias 1
-    o = jax.nn.sigmoid(z[:, hidden:2 * hidden])
-    g = jnp.tanh(z[:, 2 * hidden:])
-    c_new = f * c + (1.0 - f) * g             # CIFG: i = 1 − f
-    h_new = o * jnp.tanh(c_new)
-    return h_new, c_new
+def _input_projection(params, x, cd):
+    """Hoisted input half of the gate pre-activations for *all* timesteps:
+    one (B·S, d) @ (d, 3h) GEMM + bias. x: (B, S, d) → zx (B, S, 3h) f32."""
+    B, S, d = x.shape
+    zx = (x.reshape(B * S, d) @ params["w_x"].astype(cd)).astype(jnp.float32)
+    return zx.reshape(B, S, -1) + params["b_gates"]
+
+
+def _recurrence(params, zx, cfg: ModelConfig, remat: bool):
+    """Run the CIFG recurrence over zx (B, S, 3h) → (hs (B, S, h) f32,
+    (h_fin, c_fin)), dispatching on the resolved ``cell_path``."""
+    B = zx.shape[0]
+    hidden = cfg.d_ff
+    h0 = jnp.zeros((B, hidden), jnp.float32)
+    c0 = jnp.zeros((B, hidden), jnp.float32)
+    path = resolve_cell_path(cfg)
+    if path in ("fused", "seq"):
+        hs, fin = cifg_sequence(zx.transpose(1, 0, 2), h0, c0,
+                                params["w_h"], cell=path,
+                                compute_dtype=cfg.compute_dtype, remat=remat)
+        return hs.transpose(1, 0, 2), fin
+
+    def step(carry, zx_t):
+        h, c = cifg_cell_ref(zx_t, carry[0], carry[1], params["w_h"],
+                             compute_dtype=cfg.compute_dtype)
+        return (h, c), h
+
+    if remat:
+        step = jax.checkpoint(step)
+    (h_fin, c_fin), hs = jax.lax.scan(step, (h0, c0), zx.transpose(1, 0, 2))
+    return hs.transpose(1, 0, 2), (h_fin, c_fin)
 
 
 def forward(params, batch, cfg: ModelConfig, *, remat: bool = False,
             collect_cache: bool = False):
     cd = jnp.dtype(cfg.compute_dtype)
     tokens = batch["tokens"]
-    B, S = tokens.shape
-    hidden = cfg.d_ff
     x = embed_tokens(params["embed"], tokens, cd)  # (B,S,d)
-    h0 = jnp.zeros((B, hidden), jnp.float32)
-    c0 = jnp.zeros((B, hidden), jnp.float32)
-
-    def step(carry, x_t):
-        h, c = carry
-        h, c = _cell(params, x_t, h, c, hidden)
-        return (h, c), h
-
-    (h_fin, c_fin), hs = jax.lax.scan(step, (h0, c0), x.transpose(1, 0, 2))
-    hs = hs.transpose(1, 0, 2).astype(cd)          # (B,S,hidden)
+    zx = _input_projection(params, x, cd)          # (B,S,3h) — one GEMM
+    hs, (h_fin, c_fin) = _recurrence(params, zx, cfg, remat)
+    hs = hs.astype(cd)                             # (B,S,hidden)
     y = hs @ params["w_proj"].astype(cd)           # (B,S,d)
     logits = lm_logits(params["embed"], y)
     if collect_cache:
@@ -66,8 +114,8 @@ def forward(params, batch, cfg: ModelConfig, *, remat: bool = False,
     return logits
 
 
-def loss_fn(params, batch, cfg: ModelConfig, *, remat: bool = True):
-    logits = forward(params, batch, cfg)
+def loss_fn(params, batch, cfg: ModelConfig, *, remat: bool = False):
+    logits = forward(params, batch, cfg, remat=remat)
     return L.lm_loss(logits, batch["labels"], cfg.vocab, batch.get("mask"))
 
 
@@ -89,13 +137,23 @@ def prefill(params, batch, cfg: ModelConfig, *, max_len: int = None):
 def decode_step(params, tokens, cache, cfg: ModelConfig):
     cd = jnp.dtype(cfg.compute_dtype)
     x = embed_tokens(params["embed"], tokens[:, None], cd)[:, 0, :]
-    h, c = _cell(params, x, cache["h"], cache["c"], cfg.d_ff)
+    zx = (x @ params["w_x"].astype(cd)).astype(jnp.float32) \
+        + params["b_gates"]
+    if resolve_cell_path(cfg) == "fused":
+        h, c = cifg_step(zx, cache["h"], cache["c"], params["w_h"],
+                         compute_dtype=cfg.compute_dtype)
+    else:
+        h, c = cifg_cell_ref(zx, cache["h"], cache["c"], params["w_h"],
+                             compute_dtype=cfg.compute_dtype)
     y = (h.astype(cd) @ params["w_proj"].astype(cd))[:, None, :]
     logits = lm_logits(params["embed"], y)[:, 0, :]
     return logits, {"h": h, "c": c, "pos": cache["pos"] + 1}
 
 
 def build(cfg: ModelConfig) -> Model:
+    if cfg.cell_path not in CELL_PATHS:
+        raise ValueError(f"cell_path must be one of {CELL_PATHS}, "
+                         f"got {cfg.cell_path!r}")
     return Model(
         cfg=cfg,
         init=partial(init, cfg=cfg),

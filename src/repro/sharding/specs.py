@@ -115,7 +115,7 @@ def _leaf_spec(names, leaf, cfg: ModelConfig, mp: int):
         return P(MP)
     if name == "b_out":
         return P(None)
-    if name in ("w_z", "w_x"):
+    if name in ("w_z", "w_x"):  # mamba in-proj AND CIFG-LSTM input gates
         return P(FSDP, MP)
     if name in ("w_B", "w_C", "w_dt"):
         return P(FSDP, None)
@@ -131,7 +131,7 @@ def _leaf_spec(names, leaf, cfg: ModelConfig, mp: int):
         return P(MP) if ssm_heads_ok else P(None)
     if name == "w":  # MoE router
         return P(FSDP, None)
-    if name == "w_gates":  # CIFG-LSTM
+    if name in ("w_h", "w_gates"):  # CIFG-LSTM recurrent / legacy fused
         return P(FSDP, MP)
     if name == "b_gates":
         return P(MP)

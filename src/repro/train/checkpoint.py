@@ -2,6 +2,12 @@
 
 Format: {"meta": {...}, "tree": nested dict with leaves as
 {"__nd__": bytes, dtype, shape}}. Arrays round-trip exactly.
+
+:func:`load` applies :func:`migrate_lstm_gates`, the one-shot layout shim
+for checkpoints written before the PR-5 CIFG param split: a fused
+``w_gates (d+h, 3h)`` matrix is sliced into ``w_x (d, 3h)`` /
+``w_h (h, 3h)`` (bytes unchanged — the split is a pure view change), so
+old checkpoints keep loading into the current model.
 """
 from __future__ import annotations
 
@@ -63,10 +69,33 @@ def save(path, params, meta: Dict[str, Any] = None) -> None:
     tmp.rename(path)  # atomic publish
 
 
+def migrate_lstm_gates(tree):
+    """Pre-PR-5 CIFG-LSTM layout shim: split a fused ``w_gates (d+h, 3h)``
+    leaf into ``w_x (d, 3h)`` (rows [:d]) and ``w_h (h, 3h)`` (rows [d:]) —
+    the dims are recovered from the shape alone (3h = n_cols ⇒ h, then
+    d = n_rows − h). Walks nested dicts/sequences; dicts that already carry
+    the split layout are left untouched. Idempotent."""
+    if isinstance(tree, dict):
+        tree = {k: migrate_lstm_gates(v) for k, v in tree.items()}
+        wg = tree.get("w_gates")
+        if (wg is not None and "w_x" not in tree and "w_h" not in tree
+                and getattr(wg, "ndim", 0) == 2 and wg.shape[1] % 3 == 0
+                and wg.shape[0] > wg.shape[1] // 3):
+            h = wg.shape[1] // 3
+            del tree["w_gates"]
+            tree["w_x"], tree["w_h"] = wg[:-h], wg[-h:]
+        return tree
+    if isinstance(tree, list):
+        return [migrate_lstm_gates(v) for v in tree]
+    if isinstance(tree, tuple):
+        return tuple(migrate_lstm_gates(v) for v in tree)
+    return tree
+
+
 def load(path) -> Tuple[Any, Dict[str, Any]]:
     obj = msgpack.unpackb(pathlib.Path(path).read_bytes(), raw=True,
                           strict_map_key=False)
     meta = {k.decode() if isinstance(k, bytes) else k:
             (v.decode() if isinstance(v, bytes) else v)
             for k, v in obj[b"meta"].items()}
-    return _decode(obj[b"tree"]), meta
+    return migrate_lstm_gates(_decode(obj[b"tree"])), meta

@@ -48,6 +48,13 @@ XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
   BENCH_JSON=BENCH_ci.json PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
   python benchmarks/bench_sim_engine.py --dry-run
 test -s BENCH_ci.json || { echo "FAIL: BENCH_ci.json not written" >&2; exit 1; }
+# the local-SGD hot path must leave a per-PR trace: the client-step
+# microbench record (µs per client step) is how cell-path regressions show
+# up without waiting for the nightly cohort sweep
+grep -q "client_step/local_sgd" BENCH_ci.json || {
+  echo "FAIL: client-step microbench record missing from BENCH_ci.json" >&2
+  exit 1
+}
 echo "BENCH_ci.json records:"
 cat BENCH_ci.json
 
