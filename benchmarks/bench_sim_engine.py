@@ -36,6 +36,13 @@ the materializing baseline; when its estimated peak exceeds
 ``BENCH_MEM_RUN_LIMIT`` bytes (default 2 GB) the record keeps the memory
 number but skips the timed run rather than swapping the box.
 
+``--pod-sweep`` benchmarks the 2-D ``(pod, data)`` cohort layout: rounds/
+sec per (pods, shards) topology in the bit-parity family — the trajectories
+are bit-identical by construction (see tests/test_engine_pods.py), so the
+records isolate the layout's collective cost. ``BENCH_ci.json`` carries a
+``sim_engine/pods=2`` point from the dry run so cross-pod throughput is
+tracked per PR.
+
 ``--client-step`` (also emitted after every full/dry run) is the
 local-SGD *numerator* microbench: µs per jit'd client step
 (``value_and_grad`` of the model loss on one client batch) per
@@ -206,6 +213,55 @@ def chunk_sweep(dry_run: bool = False):
                           rounds=rounds, k=k, mem_baseline=mem0)
 
 
+def pod_sweep(dry_run: bool = False):
+    """--pod-sweep: rounds/sec per (pods, shards) topology of the 2-D
+    ``(pod, data)`` cohort mesh (engine backend, ``num_pods × num_shards``
+    devices). Every topology in the sweep is in the bit-parity family
+    (total dividing CANON_BLOCKS), so the records measure pure layout cost:
+    the trajectories are bit-identical, only the collective pattern (intra-
+    pod gather + pod-partial exchange vs one flat gather) changes. On CPU
+    run under ``XLA_FLAGS=--xla_force_host_platform_device_count=16`` to
+    cover the whole grid."""
+    topologies = ((1, 1), (2, 1), (2, 2), (2, 4), (4, 2))
+    n_dev = len(jax.devices())
+    fit = [(p, s) for p, s in topologies if p * s <= n_dev]
+    skipped = [t for t in topologies if t not in fit]
+    if skipped:
+        print(f"bench_sim_engine: skipping pod topologies {skipped} "
+              f"(only {n_dev} devices visible; set XLA_FLAGS="
+              "--xla_force_host_platform_device_count=16)")
+    cohorts = [8] if dry_run else [200, 1000]
+    rounds = 4 if dry_run else 40
+    results = {}
+    for cohort in cohorts:
+        n_users = max(6 * cohort, 50)
+        cfg, model, ds = _setup(n_users)
+        dp = DPConfig(clients_per_round=cohort, noise_multiplier=0.3,
+                      clip_norm=0.8, server_opt="momentum", server_lr=0.5,
+                      server_momentum=0.9)
+        cl = ClientConfig(local_epochs=1, batch_size=10, lr=0.3)
+        ref_rps = None
+        for pods, shards in fit:
+            tr = FederatedTrainer(model, ds, dp, cl,
+                                  pop=PopulationSim(n_users,
+                                                    availability=0.5,
+                                                    seed=0),
+                                  n_local_batches=2, seed=0,
+                                  backend="engine", num_pods=pods,
+                                  num_shards=shards,
+                                  rounds_per_call=min(20, rounds))
+            rps = _rounds_per_sec(tr, min(20, rounds), rounds)
+            if ref_rps is None:
+                ref_rps = rps                 # (1, 1) leads the sweep
+            emit(f"sim_engine/pods/cohort={cohort}/pods={pods}/"
+                 f"shards={shards}", 1e6 / rps,
+                 f"rounds_per_sec={rps:.3f};"
+                 f"vs_unsharded={rps / ref_rps:.2f}x;"
+                 f"total_shards={pods * shards}")
+            results[(cohort, pods, shards)] = rps
+    return results
+
+
 def run(dry_run: bool = False, shards=(1, 2, 4, 8)):
     cohorts = [8] if dry_run else [50, 200, 1000]
     host_rounds = 2 if dry_run else 5
@@ -292,6 +348,11 @@ if __name__ == "__main__":
                     help="sweep cohort_chunk at cohorts {200, 1000, 5000}: "
                          "rounds/sec (steady-state, compile split out) + "
                          "peak live-buffer bytes per record")
+    ap.add_argument("--pod-sweep", action="store_true",
+                    help="sweep (pods, shards) topologies of the 2-D "
+                         "(pod, data) cohort mesh: rounds/sec per grid "
+                         "point (force 16 devices on CPU for the full "
+                         "grid)")
     ap.add_argument("--client-step", action="store_true",
                     help="only the client-step microbench (µs per local-SGD "
                          "step, per cell_path)")
@@ -299,9 +360,11 @@ if __name__ == "__main__":
     if args.client_step:
         client_step_bench(dry_run=args.dry_run)
     else:
-        if not args.chunk_sweep:
+        if not (args.chunk_sweep or args.pod_sweep):
             run(dry_run=args.dry_run,
                 shards=tuple(int(s) for s in args.shards.split(",") if s))
         if args.chunk_sweep or args.dry_run:
             chunk_sweep(dry_run=args.dry_run)
+        if args.pod_sweep or args.dry_run:
+            pod_sweep(dry_run=args.dry_run)
         client_step_bench(dry_run=args.dry_run)

@@ -40,30 +40,40 @@ a single ``lax.scan``:
   clipped sum; Δ̄ and σ keep the DPConfig calibration z·S/(qN) against the
   *expected* round size.
 
-Cohort sharding (``num_shards > 1``)
-------------------------------------
+Cohort sharding (``num_shards > 1`` / ``num_pods > 1``)
+-------------------------------------------------------
 
-The per-round cohort axis shards across a 1-D ``data`` mesh with
-``shard_map`` (`sharding.specs.sim_mesh_config` / `launch.mesh.
-make_cohort_mesh`): client batching and the per-client clip live per-shard,
-and a single collective reduction produces the global clipped sum before
-the (replicated) noise/Nesterov server step. Cohort sampling and the
-Poisson draw stay replicated — every shard sees the same PRNG stream, so
-all shards agree on the cohort and noise is drawn once (σ calibration is
-untouched by the shard count).
+The per-round cohort axis shards across a 1-D ``data`` mesh — or, with
+``num_pods > 1``, the 2-D ``(pod, data)`` batch slice of the multi-pod
+production mesh — with ``shard_map`` (`sharding.specs.sim_mesh_config` /
+`launch.mesh.make_cohort_mesh`): client batching and the per-client clip
+live per-shard, and a single collective reduction produces the global
+clipped sum before the (replicated) noise/Nesterov server step. Cohort
+sampling and the Poisson draw stay replicated — every shard sees the same
+PRNG stream, so all shards agree on the cohort and noise is drawn once
+(σ calibration is untouched by the topology). Params and the noise stream
+are pod-replicated (hybrid-FSDP layout of `sharding.specs`): only the
+round-sum block partials ever cross the inter-pod axis.
 
 Because float addition is not associative, a naive per-shard partial sum +
 ``psum`` would make params drift with the shard count. Instead the engine
 reduces through a **canonical block tree** (:func:`cohort_sum`): the padded
 cohort buffer is split into :data:`CANON_BLOCKS` contiguous blocks whose
 boundaries align with every supported shard boundary, each block is summed
-locally, and the block partials are combined by a fixed pairwise tree
-(shards ``all_gather`` the partials so the tree is evaluated identically
-everywhere). The result is *bit-identical for every shard count dividing*
-:data:`CANON_BLOCKS` — `tests/test_engine_sharded.py` asserts zero-noise
-bit-exact trajectory parity across shards {1, 2, 4, 8} — which is exactly
-the property the DP analysis needs: the clipped-sum sensitivity bound
-S/(qN) survives unchanged under any aggregation topology [MRTZ17].
+locally, and the block partials are combined by a fixed pairwise tree. On
+the 1-D mesh the shards ``all_gather`` the partials so the tree is
+evaluated identically everywhere; on the 2-D mesh the gather runs in two
+stages — each pod's contiguous block group is gathered over the intra-pod
+``data`` axis and folded *pod-locally*, and only those pod partials cross
+the expensive ``pod`` axis, where the same pairwise tree combines them
+(`reduction.fold_pods`). Since :data:`CANON_BLOCKS` is a power of two the
+two-level fold is a re-bracketing of the flat tree, so the result is
+*bit-identical for every ``(num_pods, num_shards)`` whose product divides*
+:data:`CANON_BLOCKS` — `tests/test_engine_sharded.py` and
+`tests/test_engine_pods.py` assert zero-noise bit-exact trajectory parity
+across shards {1, 2, 4, 8} and pods {1, 2, 4} — which is exactly the
+property the DP analysis needs: the clipped-sum sensitivity bound S/(qN)
+survives unchanged under any aggregation topology [MRTZ17].
 
 Cohort / buffer sizes that don't divide the shard count are **padded**
 (masked empty slots), never truncated — dropping devices would silently
@@ -99,7 +109,7 @@ from repro.fl.reduction import (CANON_BLOCKS, block_sums as _block_sums,
                                 resolve_chunk)
 from repro.launch.mesh import make_cohort_mesh
 from repro.models.api import Model
-from repro.sharding.specs import (batch_axis_size, cohort_spec,
+from repro.sharding.specs import (batch_axes, cohort_spec,
                                   sim_mesh_config)
 from repro.utils.compat import shard_map
 
@@ -206,13 +216,18 @@ class SimEngine:
     apply — inclusion probability is uniform, matching the host
     ``sample_round(scheme="poisson")`` reference).
 
-    ``num_shards`` (or an explicit 1-D ``mesh_config``, see
-    `sharding.specs.sim_mesh_config`) shards the cohort axis across that
-    many devices with ``shard_map`` — sampling, noise, and the server step
-    stay replicated; only client batching + local training + clipping are
-    per-shard, combined by the canonical reduction (:func:`cohort_sum`
-    association). Needs ≥ ``num_shards`` visible devices (on CPU force them
-    with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``).
+    ``num_shards`` / ``num_pods`` (or an explicit cohort ``mesh_config``,
+    see `sharding.specs.sim_mesh_config`) shard the cohort axis across
+    ``num_pods × num_shards`` devices with ``shard_map`` — a 1-D ``data``
+    mesh, or the 2-D ``(pod, data)`` batch slice of the production mesh
+    when ``num_pods > 1``. Sampling, noise, and the server step stay
+    replicated (params are pod-replicated; only round-sum block partials
+    cross the inter-pod axis); only client batching + local training +
+    clipping are per-shard, combined by the canonical reduction
+    (:func:`cohort_sum` association — bit-identical for every topology
+    whose ``num_pods · num_shards`` divides :data:`CANON_BLOCKS`). Needs
+    ≥ ``num_pods × num_shards`` visible devices (on CPU force them with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``).
 
     ``cohort_chunk`` streams the round: each canonical block's partial sum
     is accumulated ``cohort_chunk`` clients at a time (gather → local SGD →
@@ -244,7 +259,7 @@ class SimEngine:
                  weight_fn: Optional[Callable] = None,
                  sampling: Optional[str] = None,
                  poisson_buffer: Optional[int] = None,
-                 num_shards: int = 1,
+                 num_shards: int = 1, num_pods: int = 1,
                  mesh_config: Optional[MeshConfig] = None,
                  cohort_chunk: Optional[int] = None,
                  clip_path: str = "fused",
@@ -260,26 +275,37 @@ class SimEngine:
             raise ValueError(f"sampling must be 'fixed' or 'poisson', "
                              f"got {self.sampling!r}")
         if mesh_config is not None:
-            if len(mesh_config.shape) != 1:
+            axes = tuple(mesh_config.axes)
+            if axes not in (("data",), ("pod", "data")):
                 raise ValueError(
-                    "SimEngine shards the cohort over a 1-D mesh; got "
-                    f"{mesh_config}. Multi-pod / model-parallel topologies "
-                    "are the launch layer's job (see ROADMAP) — pass "
-                    "sim_mesh_config(num_shards) or just num_shards.")
-            from_mesh = batch_axis_size(mesh_config)
+                    "SimEngine shards the cohort over its batch axes only "
+                    f"— a ('data',) or ('pod', 'data') mesh; got "
+                    f"{mesh_config}. Model-parallel axes are the launch "
+                    "layer's job — pass sim_mesh_config(num_shards, "
+                    "num_pods) or just num_shards/num_pods.")
+            sizes = dict(zip(axes, mesh_config.shape))
+            from_mesh = sizes["data"]
+            from_mesh_pods = sizes.get("pod", 1)
             if num_shards not in (1, from_mesh):
                 raise ValueError(
                     f"num_shards={num_shards} disagrees with mesh_config's "
-                    f"batch axes ({from_mesh} devices); pass one or the "
+                    f"data axis ({from_mesh} devices); pass one or the "
                     "other")
-            num_shards = from_mesh
+            if num_pods not in (1, from_mesh_pods):
+                raise ValueError(
+                    f"num_pods={num_pods} disagrees with mesh_config's pod "
+                    f"axis ({from_mesh_pods} pods); pass one or the other")
+            num_shards, num_pods = from_mesh, from_mesh_pods
         self.num_shards = int(num_shards)
-        self._mesh_config = sim_mesh_config(self.num_shards)
+        self.num_pods = int(num_pods)
+        self._mesh_config = sim_mesh_config(self.num_shards, self.num_pods)
+        # total devices the cohort axis shards over (pod-major layout)
+        self.total_shards = self.num_pods * self.num_shards
         # the cohort axis shards over exactly the batch_axes of the mesh
         # config — same layout rule as the production client dimension
         self._cohort_pspec = cohort_spec(self._mesh_config)
         self.mesh = (make_cohort_mesh(self._mesh_config)
-                     if self.num_shards > 1 else None)
+                     if self.total_shards > 1 else None)
         self.eval_fn = eval_fn
         self.eval_every = max(int(eval_every), 1)
         self.examples = jnp.asarray(data["examples"])
@@ -294,7 +320,8 @@ class SimEngine:
             # pad, never truncate: a buffer that doesn't divide the shard
             # count grows to the next canonical multiple (masked empty
             # slots) so no selected device is silently dropped
-            self.buffer = canon_pad(min(self.n_users, buf), self.num_shards)
+            self.buffer = canon_pad(min(self.n_users, buf), self.num_shards,
+                                    self.num_pods)
             if self.buffer < self.cohort + 2 * np.sqrt(self.cohort) \
                     and self.buffer < self.n_users:
                 import warnings
@@ -309,14 +336,16 @@ class SimEngine:
         # the physical per-round buffer: cohort/poisson slots padded to the
         # canonical block grid (slot_mask zeroes the padding exactly)
         self.padded = (self.buffer if self.sampling == "poisson"
-                       else canon_pad(self.cohort, self.num_shards))
-        self.n_blocks = n_canon_blocks(self.num_shards)
-        if self.padded % self.num_shards or self.padded % self.n_blocks:
+                       else canon_pad(self.cohort, self.num_shards,
+                                      self.num_pods))
+        self.n_blocks = n_canon_blocks(self.num_shards, self.num_pods)
+        if self.padded % self.total_shards or self.padded % self.n_blocks:
             raise AssertionError(
                 f"SimEngine internal error: padded cohort buffer "
-                f"{self.padded} must be divisible by num_shards="
-                f"{self.num_shards} and n_blocks={self.n_blocks} — padding "
-                "must never truncate devices (ragged cohorts pad up)")
+                f"{self.padded} must be divisible by num_pods×num_shards="
+                f"{self.total_shards} and n_blocks={self.n_blocks} — "
+                "padding must never truncate devices (ragged cohorts pad "
+                "up)")
         if clip_path not in CLIP_PATHS:
             raise ValueError(f"clip_path must be one of {CLIP_PATHS}, "
                              f"got {clip_path!r}")
@@ -439,28 +468,49 @@ class SimEngine:
     def _cohort_sums(self, params, ids, keys, slot_mask):
         """Global masked clipped sum + stat sums over the padded cohort
         buffer — per-shard compute under ``shard_map``, combined by the
-        canonical block tree so every shard count agrees bitwise."""
-        if self.num_shards == 1:
+        canonical block tree so every (pod, shard) topology whose total
+        divides the block count agrees bitwise. On the 2-D ``(pod, data)``
+        mesh the reduction is hierarchical: each pod gathers and folds its
+        own contiguous block group over the intra-pod ``data`` axis, and
+        only those pod partials cross the inter-pod ``pod`` axis (where the
+        same pairwise tree combines them — `reduction.fold_pods`
+        association)."""
+        if self.total_shards == 1:
             tree, scal = self._local_block_sums(params, ids, keys, slot_mask,
                                                 self.n_blocks)
             return (jax.tree_util.tree_map(_fold_blocks, tree),
                     _fold_blocks(scal))
 
         cspec = self._cohort_pspec
-        axis = cspec[0]
-        nblk_local = self.n_blocks // self.num_shards
+        axes = batch_axes(self._mesh_config)  # ("data",) or ("pod", "data")
+        data_axis = axes[-1]
+        nblk_local = self.n_blocks // self.total_shards
+        nblk_pod = self.n_blocks // self.num_pods
 
         def body(params, ids, keys, slot_mask):
             tree, scal = self._local_block_sums(params, ids, keys, slot_mask,
                                                 nblk_local)
             # all_gather carries the raw block partials (no arithmetic), so
             # the pairwise tree below is evaluated identically — and with
-            # the identical association — on every shard
-            gather = lambda l: jax.lax.all_gather(l, axis).reshape(
-                (self.n_blocks,) + l.shape[1:])
-            tree = jax.tree_util.tree_map(gather, tree)
-            return (jax.tree_util.tree_map(_fold_blocks, tree),
-                    _fold_blocks(gather(scal)))
+            # the identical association — on every shard. The cohort layout
+            # is pod-major, so gathering over the data axis yields this
+            # pod's contiguous block group in canonical order.
+            gather_d = lambda l: jax.lax.all_gather(l, data_axis).reshape(
+                (nblk_pod,) + l.shape[1:])
+            if self.num_pods == 1:
+                tree = jax.tree_util.tree_map(gather_d, tree)
+                return (jax.tree_util.tree_map(_fold_blocks, tree),
+                        _fold_blocks(gather_d(scal)))
+            # pod-local fold first: only the folded pod partials — one
+            # |params|-sized value per pod, not per block — cross the
+            # expensive inter-pod links
+            pod_tree = jax.tree_util.tree_map(
+                lambda l: _fold_blocks(gather_d(l)), tree)
+            pod_scal = _fold_blocks(gather_d(scal))
+            gather_p = lambda l: jax.lax.all_gather(l, "pod")
+            tree = jax.tree_util.tree_map(
+                lambda l: _fold_blocks(gather_p(l)), pod_tree)
+            return tree, _fold_blocks(gather_p(pod_scal))
 
         sharded = shard_map(
             body, mesh=self.mesh,

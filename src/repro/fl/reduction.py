@@ -14,6 +14,15 @@ The canonical association has two levels:
   supported shard boundary; block partials are combined by a fixed pairwise
   tree (:func:`fold_blocks`). Bit-identical for every shard count dividing
   :data:`CANON_BLOCKS` (PR 3).
+* **across pods** — on a 2-D ``(pod, data)`` cohort layout each pod owns a
+  contiguous group of canonical blocks: the group is folded *pod-locally*
+  by the same pairwise tree and only the pod partials cross the inter-pod
+  axis, where the same tree combines them (:func:`fold_pods`). Because
+  :data:`CANON_BLOCKS` is a power of two, this two-level fold is exactly a
+  re-bracketing of :func:`fold_blocks`' balanced tree — bit-identical to
+  the flat fold for every pod count dividing the block count, which is
+  what keeps the whole ``pods × shards`` family (every product dividing
+  :data:`CANON_BLOCKS`) inside one bit-parity class (PR 6).
 * **within a block** — slots are folded strictly left-to-right, one at a
   time (:func:`slot_fold` — ``(((0 + u₀) + u₁) + u₂) + …``). A streaming
   accumulator that processes the block in chunks of any size reproduces the
@@ -66,6 +75,35 @@ def fold_blocks(a):
     return a[0]
 
 
+def fold_pods(blocks, num_pods: int = 1):
+    """Two-level canonical fold over a ``(pod, data)`` cohort layout: each
+    pod's contiguous group of ``blocks.shape[0] / num_pods`` block partials
+    is folded pod-locally by :func:`fold_blocks`' pairwise tree, then the
+    pod partials are combined by the same tree — the only values that ever
+    need to cross the inter-pod axis.
+
+    For a power-of-two block count this is exactly a re-bracketing of the
+    flat :func:`fold_blocks` balanced tree (a pod partial *is* an internal
+    node of it), so the result is bit-identical to ``fold_blocks(blocks)``
+    for every power-of-two ``num_pods`` dividing the block count — the
+    property that keeps the engine's ``pods × shards`` parity family one
+    bit-exact class. Non-dividing pod counts are a layout error, not a
+    padding case (block counts pad to the pod grid upstream, see
+    :func:`n_canon_blocks`)."""
+    if num_pods == 1:
+        return fold_blocks(blocks)
+    if num_pods < 1 or blocks.shape[0] % num_pods:
+        raise ValueError(
+            f"fold_pods: num_pods={num_pods} must divide the block count "
+            f"{blocks.shape[0]} — each pod owns a contiguous group of whole "
+            "canonical blocks (size the grid with n_canon_blocks(num_shards,"
+            " num_pods))")
+    per = blocks.shape[0] // num_pods
+    partials = jnp.stack([fold_blocks(blocks[p * per:(p + 1) * per])
+                          for p in range(num_pods)])
+    return fold_blocks(partials)
+
+
 def slot_fold(acc, stacked):
     """Strict left-to-right sequential sum of ``stacked``'s leading axis
     into ``acc`` — the canonical *intra-block* association. Splitting the
@@ -78,25 +116,32 @@ def slot_fold(acc, stacked):
     return acc
 
 
-def canon_pad(n: int, num_shards: int = 1) -> int:
+def canon_pad(n: int, num_shards: int = 1, num_pods: int = 1) -> int:
     """Smallest padded cohort-buffer size ≥ ``n`` whose canonical blocks
-    align with ``num_shards`` shard boundaries. For every shard count
-    dividing :data:`CANON_BLOCKS` the padded size (and hence the reduction
-    tree) is *identical*, which is what makes cross-shard-count parity
-    bit-exact."""
+    align with ``num_pods × num_shards`` shard boundaries (each of the
+    ``num_pods`` pods owns a contiguous group of whole blocks, each of its
+    per-pod shards a contiguous sub-group). For every topology whose total
+    shard count ``num_pods · num_shards`` divides :data:`CANON_BLOCKS` the
+    padded size (and hence the reduction tree) is *identical*, which is
+    what makes cross-topology parity bit-exact."""
+    nb = n_canon_blocks(num_shards, num_pods)
+    return -(-max(int(n), 1) // nb) * nb
+
+
+def n_canon_blocks(num_shards: int = 1, num_pods: int = 1) -> int:
+    """Block count of the canonical reduction: :data:`CANON_BLOCKS` whenever
+    the total shard count ``num_pods · num_shards`` divides it (the
+    bit-parity regime); otherwise the next multiple of the total so both
+    pod and shard boundaries still land on block boundaries — nobody is
+    ever truncated, awkward topologies just pad further."""
     if num_shards < 1:
         raise ValueError(f"num_shards must be >= 1, got {num_shards}")
-    return -(-max(int(n), 1) // n_canon_blocks(num_shards)) \
-        * n_canon_blocks(num_shards)
-
-
-def n_canon_blocks(num_shards: int = 1) -> int:
-    """Block count of the canonical reduction: :data:`CANON_BLOCKS` whenever
-    the shard count divides it (the bit-parity regime); otherwise the next
-    multiple of ``num_shards`` so shard boundaries still land on blocks."""
-    if CANON_BLOCKS % num_shards == 0:
+    if num_pods < 1:
+        raise ValueError(f"num_pods must be >= 1, got {num_pods}")
+    total = num_shards * num_pods
+    if CANON_BLOCKS % total == 0:
         return CANON_BLOCKS
-    return num_shards * max(1, -(-CANON_BLOCKS // num_shards))
+    return total * max(1, -(-CANON_BLOCKS // total))
 
 
 def auto_chunk(blk: int, max_chunk: int = DEFAULT_MAX_CHUNK) -> int:
@@ -137,15 +182,18 @@ def resolve_chunk(cohort_chunk, blk: int, strict: bool = True) -> int:
         "path)")
 
 
-def cohort_sum(tree, mask, n_blocks: int = CANON_BLOCKS):
+def cohort_sum(tree, mask, n_blocks: int = CANON_BLOCKS,
+               num_pods: int = 1):
     """Topology-invariant masked sum over a stacked cohort pytree.
 
     ``tree`` has a leading cohort axis, ``mask`` is the (C,) 0/1 slot mask.
     Masked slots contribute *exactly* zero (0·x = 0 and x + 0 = x are exact
     in IEEE float), and the reduction runs block-local sums followed by a
-    fixed pairwise tree over the blocks — the same association no matter how
-    the cohort axis is later sharded, so the DP sensitivity of the sum to
-    any single slot is the same under every aggregation topology."""
+    fixed pairwise tree over the blocks — per pod first, then across the
+    ``num_pods`` pod partials (:func:`fold_pods`) — the same association no
+    matter how the cohort axis is later sharded, so the DP sensitivity of
+    the sum to any single slot is the same under every aggregation
+    topology."""
     m = mask.astype(jnp.float32)
     pad = -(-m.shape[0] // n_blocks) * n_blocks - m.shape[0]
 
@@ -154,6 +202,6 @@ def cohort_sum(tree, mask, n_blocks: int = CANON_BLOCKS):
         if pad:
             lm = jnp.concatenate(
                 [lm, jnp.zeros((pad,) + lm.shape[1:], lm.dtype)], axis=0)
-        return fold_blocks(block_sums(lm, n_blocks))
+        return fold_pods(block_sums(lm, n_blocks), num_pods)
 
     return jax.tree_util.tree_map(one, tree)

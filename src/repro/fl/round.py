@@ -19,11 +19,13 @@ control the streaming round accumulation on *every* backend (both the
 engine and the host loop fold ``cohort_chunk`` clients at a time through
 the canonical block grid instead of materializing the full clipped-update
 stack; ``cohort_chunk=0`` restores the materializing reference). Engine
-backends additionally accept ``num_shards`` (shard the per-round cohort
-axis across that many devices — trajectories are bit-identical across shard
-counts dividing `engine.CANON_BLOCKS` *and* across dividing chunk sizes,
-see `repro.fl.engine`) and an in-scan ``eval_fn(params, round_idx)`` hook,
-whose stacked outputs land in ``trainer.eval_history``.
+backends additionally accept ``num_shards`` / ``num_pods`` (shard the
+per-round cohort axis across a 1-D ``(data,)`` or 2-D ``(pod, data)``
+device mesh — trajectories are bit-identical across every topology whose
+``num_pods × num_shards`` divides `engine.CANON_BLOCKS` *and* across
+dividing chunk sizes, see `repro.fl.engine`) and an in-scan
+``eval_fn(params, round_idx)`` hook, whose stacked outputs land in
+``trainer.eval_history``.
 """
 from __future__ import annotations
 
@@ -64,16 +66,17 @@ class FederatedTrainer:
                  pop: Optional[PopulationSim] = None, seed: int = 0,
                  n_local_batches: int = 4, backend: str = "host",
                  rounds_per_call: int = 8, sampling: Optional[str] = None,
-                 num_shards: int = 1, cohort_chunk: Optional[int] = None,
+                 num_shards: int = 1, num_pods: int = 1,
+                 cohort_chunk: Optional[int] = None,
                  clip_path: str = "fused", eval_fn=None,
                  eval_every: int = 1):
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}, "
                              f"got {backend!r}")
-        if num_shards != 1 and backend == "host":
-            raise ValueError("num_shards is an engine-backend feature (the "
-                             "host loop stacks clients on one host); use "
-                             "backend='engine'")
+        if (num_shards != 1 or num_pods != 1) and backend == "host":
+            raise ValueError("num_shards/num_pods are engine-backend "
+                             "features (the host loop stacks clients on one "
+                             "host); use backend='engine'")
         self.model = model
         self.dataset = dataset
         self.dp = dp
@@ -132,6 +135,7 @@ class FederatedTrainer:
                 pace_penalty=self.pop.pace_penalty,
                 rounds_per_call=rounds_per_call,
                 sampling=self.sampling, num_shards=num_shards,
+                num_pods=num_pods,
                 cohort_chunk=cohort_chunk, clip_path=clip_path,
                 eval_fn=eval_fn, eval_every=eval_every)
             self._estate = self.engine.init_state(

@@ -4,9 +4,14 @@ A FUNCTION (not a module-level constant) so importing this module never
 touches jax device state. Single pod: (data=16, model=16) = 256 chips of a
 v5e pod. Multi-pod: (pod=2, data=16, model=16) = 512 chips; clients shard
 across pods, params replicate across pods (hybrid FSDP), so only the
-DP-FedAvg round reduction crosses the inter-pod links.
+DP-FedAvg round-sum block partials cross the inter-pod links — the engine's
+canonical cross-pod reduction (`repro.fl.reduction.fold_pods`) folds each
+pod's blocks pod-locally and sends only the pod partials over the ``pod``
+axis.
 """
 from __future__ import annotations
+
+from typing import Optional, Tuple
 
 import numpy as np
 
@@ -14,11 +19,24 @@ import jax
 
 from repro.configs.base import MULTI_POD, SINGLE_POD, MeshConfig
 
+# Axis layouts make_cohort_mesh accepts: the cohort's batch axes only (the
+# 1-D sim layout, or the multi-pod batch slice of the production mesh).
+COHORT_AXES = (("data",), ("pod", "data"))
 
-def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
+
+def make_production_mesh(*, multi_pod: bool = False,
+                         shape: Optional[Tuple[int, ...]] = None):
+    """Concrete production mesh: ``(data, model)`` or, with ``multi_pod``,
+    ``(pod, data, model)``. ``shape`` overrides the chip counts (same axis
+    order) for test-scale meshes on forced host devices; it must keep one
+    entry per axis."""
+    cfg = mesh_config(multi_pod=multi_pod)
+    shape = cfg.shape if shape is None else tuple(shape)
+    if len(shape) != len(cfg.axes):
+        raise ValueError(
+            f"make_production_mesh: shape {shape} must have one entry per "
+            f"axis {cfg.axes}")
+    return jax.make_mesh(shape, cfg.axes)
 
 
 def mesh_config(*, multi_pod: bool = False) -> MeshConfig:
@@ -26,19 +44,25 @@ def mesh_config(*, multi_pod: bool = False) -> MeshConfig:
 
 
 def make_cohort_mesh(mesh_cfg: MeshConfig):
-    """Concrete 1-D device mesh for the simulation engine's sharded cohort.
+    """Concrete device mesh for the simulation engine's sharded cohort: the
+    1-D ``(data,)`` sim layout or the 2-D ``(pod, data)`` batch slice of the
+    multi-pod production mesh.
 
     Takes the first ``n_devices`` local devices (CPU included — CI forces
-    8 host devices via ``XLA_FLAGS=--xla_force_host_platform_device_count=8``)
-    and lays them out over the mesh's single batch axis. The engine keeps its
-    mesh 1-D; the cross-pod reduction of the multi-pod production mesh is the
-    launch layer's job (see ROADMAP).
+    host devices via ``XLA_FLAGS=--xla_force_host_platform_device_count=N``)
+    and lays them out over the config's batch axes. The engine owns the
+    cross-pod round reduction on this mesh (pod-local canonical block folds;
+    only the pod partials cross the ``pod`` axis — see `repro.fl.engine`);
+    model-parallel axes stay the launch layer's job, so a config carrying a
+    ``model`` axis is rejected here.
     """
-    if len(mesh_cfg.shape) != 1:
+    if tuple(mesh_cfg.axes) not in COHORT_AXES:
         raise ValueError(
-            "make_cohort_mesh expects a 1-D MeshConfig (the sim engine "
-            f"shards the cohort over a single axis); got {mesh_cfg}. Use "
-            "sharding.specs.sim_mesh_config(num_shards).")
+            "make_cohort_mesh expects a cohort MeshConfig over the batch "
+            f"axes only — ('data',) or ('pod', 'data') — got {mesh_cfg}. "
+            "Model-parallel axes are the launch layer's job; build the "
+            "cohort slice with sharding.specs.sim_mesh_config(num_shards, "
+            "num_pods).")
     n = mesh_cfg.n_devices
     devices = jax.devices()
     if len(devices) < n:
@@ -47,4 +71,5 @@ def make_cohort_mesh(mesh_cfg: MeshConfig):
             "visible. On CPU, force host devices with XLA_FLAGS="
             f"--xla_force_host_platform_device_count={n} (set it before "
             "importing jax).")
-    return jax.sharding.Mesh(np.asarray(devices[:n]), mesh_cfg.axes)
+    return jax.sharding.Mesh(
+        np.asarray(devices[:n]).reshape(mesh_cfg.shape), mesh_cfg.axes)

@@ -54,9 +54,14 @@ def main():
                     help="rounds fused per jit call (engine backend)")
     ap.add_argument("--num-shards", type=int, default=1,
                     help="shard the per-round cohort axis across this many "
-                         "devices (engine backend; on CPU force devices "
-                         "with XLA_FLAGS="
+                         "devices per pod (engine backend; on CPU force "
+                         "devices with XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--num-pods", type=int, default=1,
+                    help="lay the cohort shards out over this many pods — "
+                         "the 2-D (pod, data) batch slice of the production "
+                         "mesh; needs num_pods x num_shards visible devices "
+                         "(engine backend)")
     ap.add_argument("--cohort-chunk", type=int, default=None,
                     help="stream the round sum this many clients at a time "
                          "(peak update memory is O(chunk); default: auto — "
@@ -113,6 +118,7 @@ def main():
                                n_local_batches=3, backend=args.backend,
                                rounds_per_call=args.rounds_per_call,
                                num_shards=args.num_shards,
+                               num_pods=args.num_pods,
                                cohort_chunk=args.cohort_chunk,
                                clip_path=args.clip_path)
     trainer.train(args.rounds, log_every=max(1, args.rounds // 20))

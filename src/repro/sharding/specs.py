@@ -45,15 +45,22 @@ def batch_axis_size(mesh_cfg: MeshConfig) -> int:
     return n
 
 
-def sim_mesh_config(num_shards: int) -> MeshConfig:
-    """1-D mesh over the ``data`` axis for the simulation engine's sharded
-    cohort (`repro.fl.engine.SimEngine(num_shards=...)`). The cohort shards
-    over exactly the axes :func:`batch_axes` names — the same layout the
-    production `launch.steps.fed_train_step` uses for its client dimension —
-    so a sim-validated shard count carries over to the real mesh."""
+def sim_mesh_config(num_shards: int, num_pods: int = 1) -> MeshConfig:
+    """Cohort mesh for the simulation engine's sharded cohort
+    (`repro.fl.engine.SimEngine(num_shards=..., num_pods=...)`): the 1-D
+    ``(data,)`` layout, or — with ``num_pods > 1`` — the 2-D
+    ``(pod, data)`` batch slice of the multi-pod production mesh. The
+    cohort shards over exactly the axes :func:`batch_axes` names — the
+    same layout the production `launch.steps.fed_train_step` uses for its
+    client dimension — so a sim-validated (pods, shards) point carries
+    over to the real mesh."""
     if num_shards < 1:
         raise ValueError(f"num_shards must be >= 1, got {num_shards}")
-    return MeshConfig((num_shards,), ("data",))
+    if num_pods < 1:
+        raise ValueError(f"num_pods must be >= 1, got {num_pods}")
+    if num_pods == 1:
+        return MeshConfig((num_shards,), ("data",))
+    return MeshConfig((num_pods, num_shards), ("pod", "data"))
 
 
 def cohort_spec(mesh_cfg: MeshConfig):

@@ -123,9 +123,11 @@ def test_momentum_accumulates():
 
 # ----------------------- DP invariants under sharding -----------------------
 #
-# cohort_sum's n_blocks is the aggregation-topology knob (the sharded
-# engine's per-shard partials are exactly its blocks), so sweeping it here
-# is sweeping shard counts — without needing multiple devices.
+# cohort_sum's (n_blocks, num_pods) pair is the aggregation-topology knob
+# (the sharded engine's per-shard partials are exactly its blocks, and the
+# engine's cross-pod fold is exactly fold_pods' two-level tree), so sweeping
+# them here is sweeping the whole 2-D (pod, data) topology family — without
+# needing multiple devices.
 
 
 def _clipped_cohort(seed, P, clip, scale=5.0):
@@ -137,20 +139,24 @@ def _clipped_cohort(seed, P, clip, scale=5.0):
     return clipped
 
 
+@pytest.mark.parametrize("num_pods", [1, 2, 4])
 @pytest.mark.parametrize("n_blocks", [1, 2, 4, 8, 16])
 @pytest.mark.parametrize("seed", [0, 11])
-def test_single_device_sensitivity_bounded_any_topology(n_blocks, seed):
+def test_single_device_sensitivity_bounded_any_topology(n_blocks, num_pods,
+                                                        seed):
     """Removing any single device from the round moves the *averaged*
-    update by at most S/(qN), whatever block/shard structure aggregates the
-    clipped sum — the clipped-sum sensitivity bound the accountant's ε
+    update by at most S/(qN), whatever block/shard/pod structure aggregates
+    the clipped sum — the clipped-sum sensitivity bound the accountant's ε
     depends on survives every aggregation topology [MRTZ17]."""
+    if n_blocks % num_pods:
+        pytest.skip("pods must divide the block count (layout invariant)")
     P, qN, clip = 16, 12, 0.8
     clipped = _clipped_cohort(seed, P, clip)
     mask = (jnp.arange(P) < qN).astype(jnp.float32)
-    base = cohort_sum(clipped, mask, n_blocks)
+    base = cohort_sum(clipped, mask, n_blocks, num_pods)
     for slot in (0, 5, qN - 1):
         drop = mask.at[slot].set(0.0)
-        neigh = cohort_sum(clipped, drop, n_blocks)
+        neigh = cohort_sum(clipped, drop, n_blocks, num_pods)
         diff = jax.tree_util.tree_map(lambda a, b: (a - b) / qN, base, neigh)
         sens = float(tree_global_norm(diff))
         assert sens <= clip / qN * (1 + 1e-4), (n_blocks, slot, sens)
@@ -161,13 +167,16 @@ def test_single_device_sensitivity_bounded_any_topology(n_blocks, seed):
                                    rtol=1e-5)
 
 
+@pytest.mark.parametrize("num_pods", [1, 2])
 @pytest.mark.parametrize("n_blocks", [1, 2, 4, 8])
-def test_poisson_mask_zeroes_excluded_slots(n_blocks):
+def test_poisson_mask_zeroes_excluded_slots(n_blocks, num_pods):
     """Slots the Poisson draw leaves empty (and padded slots of a ragged
     buffer) contribute *exactly* zero to the aggregated update — even if
     the buffer's excluded rows hold garbage, because 0·x and x+0 are exact
     in IEEE float. This is what makes the fixed-shape buffer a faithful
     implementation of variable-size rounds."""
+    if n_blocks % num_pods:
+        pytest.skip("pods must divide the block count (layout invariant)")
     N, buffer = 64, canon_pad(24, n_blocks)
     avail = jnp.ones((N,), bool)
     ids, slot_mask, took = poisson_select(jax.random.PRNGKey(3), 0.25,
@@ -181,8 +190,8 @@ def test_poisson_mask_zeroes_excluded_slots(n_blocks):
                             l, 1e30), clean)
     zeroed = jax.tree_util.tree_map(
         lambda l: l * m.reshape((-1,) + (1,) * (l.ndim - 1)), clean)
-    a = cohort_sum(poisoned, slot_mask, n_blocks)
-    b = cohort_sum(zeroed, slot_mask, n_blocks)
+    a = cohort_sum(poisoned, slot_mask, n_blocks, num_pods)
+    b = cohort_sum(zeroed, slot_mask, n_blocks, num_pods)
     for la, lb in zip(jax.tree_util.tree_leaves(a),
                       jax.tree_util.tree_leaves(b)):
         np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))

@@ -1,0 +1,278 @@
+"""Cross-pod (2-D ``(pod, data)``) engine ↔ 1-D / unsharded engine parity.
+
+The multi-pod engine (`SimEngine(num_pods=P, num_shards=S)`) lays the
+cohort out pod-major over the ``(pod, data)`` batch slice of the production
+mesh and reduces hierarchically: per-shard canonical block partials gather
+over the intra-pod ``data`` axis, fold pod-locally, and only the pod
+partials cross the ``pod`` axis. Because the pod partials are internal
+nodes of `fold_blocks`' balanced tree (`reduction.fold_pods`), every
+topology whose ``num_pods × num_shards`` divides `CANON_BLOCKS` — and every
+``cohort_chunk`` dividing the block size — must be *bit-identical* to the
+unsharded engine, at zero noise and under σ>0. That bitwise invariance is
+what keeps the clipped-sum sensitivity S/(qN), and hence the accountant's
+ε, independent of how pods are laid out between launches.
+
+Grid points above the visible device count are skipped; run the full
+{pods 1, 2} × {shards 1, 2, 4} × {chunk | block} grid on CPU with
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=16 \
+        PYTHONPATH=src python -m pytest -q tests/test_engine_pods.py
+
+(the CI ``tier1-pods`` matrix leg does exactly this; the exhaustive
+chunk × noise cross runs in the nightly ``--runslow`` leg).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ClientConfig, DPConfig, get_config
+from repro.configs.base import MeshConfig
+from repro.data.corpus import BigramCorpus
+from repro.data.federated import FederatedDataset
+from repro.fl.engine import SimEngine, canon_pad
+from repro.fl.population import PopulationSim
+from repro.fl.round import FederatedTrainer
+from repro.models import build
+from repro.sharding.specs import sim_mesh_config
+
+VOCAB = 300
+ROUNDS = 2           # = rounds_per_call → one compiled scan per engine
+COHORT = 32          # padded 32 → 8 blocks → block size 4 → chunks {1,2,4}
+
+def _needs(n):
+    return pytest.mark.skipif(
+        len(jax.devices()) < n,
+        reason=f"needs {n} devices (XLA_FLAGS="
+               f"--xla_force_host_platform_device_count=16)")
+
+
+# (pods, shards) topologies whose total divides CANON_BLOCKS = 8 — the
+# bit-parity family the acceptance grid covers
+TOPOLOGIES = [(2, 1), (2, 2), (2, 4), (4, 2), (8, 1)]
+topo_params = [pytest.param(p, s, marks=_needs(p * s))
+               for p, s in TOPOLOGIES]
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("gboard-cifg-lstm").with_(vocab=VOCAB, d_model=24,
+                                               d_ff=48)
+    model = build(cfg)
+    corpus = BigramCorpus(vocab_size=VOCAB, seed=0)
+    ds = FederatedDataset(corpus, n_users=80, seq_len=16,
+                          sentences_per_user=20)
+    return cfg, model, ds
+
+
+@pytest.fixture(scope="module")
+def runner(setup):
+    """Memoized engine runs keyed by config — parity tests share runs."""
+    _, model, ds = setup
+    data = ds.to_device_arrays()
+    cache = {}
+
+    def run(*, pods=1, shards=1, chunk=None, noise=0.0, sampling="fixed",
+            cohort=COHORT):
+        key = (pods, shards, chunk, noise, sampling, cohort)
+        if key not in cache:
+            dp = DPConfig(clients_per_round=cohort, noise_multiplier=noise,
+                          clip_norm=0.8, server_opt="momentum",
+                          server_lr=0.5, server_momentum=0.9,
+                          sampling=sampling)
+            cl = ClientConfig(local_epochs=1, batch_size=10, lr=0.3)
+            eng = SimEngine(
+                model, data, dp, cl, n_local_batches=2,
+                availability=1.0 if sampling == "poisson" else 0.6,
+                rounds_per_call=2, num_pods=pods, num_shards=shards,
+                cohort_chunk=chunk)
+            state = eng.init_state(model.init(jax.random.PRNGKey(1)), seed=0)
+            state, hist = eng.run(state, ROUNDS)
+            cache[key] = (eng, state, hist)
+        return cache[key]
+
+    return run
+
+
+def _max_leaf_diff(a, b):
+    d = jax.tree_util.tree_map(
+        lambda x, y: float(jnp.max(jnp.abs(x.astype(jnp.float32)
+                                           - y.astype(jnp.float32)))), a, b)
+    return max(jax.tree_util.tree_leaves(d))
+
+
+def _assert_bitwise(run_a, run_b):
+    _, sa, ha = run_a
+    _, sb, hb = run_b
+    np.testing.assert_array_equal(ha["loss"], hb["loss"])
+    np.testing.assert_array_equal(ha["mean_update_norm"],
+                                  hb["mean_update_norm"])
+    np.testing.assert_array_equal(ha["n_clients"], hb["n_clients"])
+    np.testing.assert_array_equal(np.asarray(sa.participation),
+                                  np.asarray(sb.participation))
+    assert _max_leaf_diff(sa.params, sb.params) == 0.0
+    assert _max_leaf_diff(sa.opt_state, sb.opt_state) == 0.0
+
+
+# ------------------------------------------------ cross-pod parity (tier-1)
+
+
+@pytest.mark.parametrize("pods,shards", topo_params)
+def test_pod_trajectory_parity_bit_exact(runner, pods, shards):
+    """Zero noise: laying the cohort out over pods must not move a single
+    bit against the unsharded engine — the pod partials are internal nodes
+    of the same canonical reduction tree."""
+    eng, _, _ = runner(pods=pods, shards=shards)
+    assert eng.total_shards == pods * shards
+    assert eng.mesh is not None
+    assert eng.mesh.axis_names == (("pod", "data") if pods > 1
+                                   else ("data",))
+    _assert_bitwise(runner(pods=pods, shards=shards), runner())
+
+
+@pytest.mark.parametrize("pods,shards",
+                         [pytest.param(2, 4, marks=_needs(8))])
+def test_pod_parity_survives_noise(runner, pods, shards):
+    """σ > 0: the Gaussian draw comes from the replicated PRNG stream
+    (drawn once, after the cross-pod sum), so noised trajectories are
+    pod-count-invariant — σ = zS/qN can't drift with the pod layout."""
+    _assert_bitwise(runner(pods=pods, shards=shards, noise=0.3),
+                    runner(noise=0.3))
+    _, _, hist = runner(pods=pods, shards=shards, noise=0.3)
+    np.testing.assert_allclose(hist["noise_std"], 0.3 * 0.8 / COHORT,
+                               rtol=1e-6)
+
+
+@pytest.mark.parametrize("pods,shards",
+                         [pytest.param(2, 2, marks=_needs(4))])
+def test_pod_poisson_parity(runner, pods, shards):
+    """Poisson-sampled variable-size rounds shard across pods too: the
+    (realized round size, trajectory) pair matches the unsharded engine
+    exactly."""
+    _assert_bitwise(runner(pods=pods, shards=shards, sampling="poisson"),
+                    runner(sampling="poisson"))
+
+
+@pytest.mark.parametrize("pods,shards,chunk",
+                         [pytest.param(2, 2, 1, marks=_needs(4)),
+                          pytest.param(2, 4, 2, marks=_needs(8))])
+def test_pod_chunk_composition(runner, pods, shards, chunk):
+    """The intra-block streaming fold stays per-pod: any (pods × shards
+    dividing CANON_BLOCKS) × (chunk dividing the block size) grid point is
+    bit-identical to the unsharded auto-chunk reference."""
+    _assert_bitwise(runner(pods=pods, shards=shards, chunk=chunk), runner())
+
+
+@pytest.mark.parametrize("pods,shards",
+                         [pytest.param(2, 2, marks=_needs(4))])
+def test_pod_ragged_cohort_pads_not_truncates(setup, runner, pods, shards):
+    """cohort=10 divides neither the 4 total shards nor the 8-block grid —
+    the buffer pads to the next canonical multiple and keeps all 10 devices
+    in every round, on every pod."""
+    eng, state, hist = runner(pods=pods, shards=shards, cohort=10)
+    assert eng.padded == canon_pad(10, shards, pods) == 16
+    assert eng.padded % (pods * shards) == 0
+    np.testing.assert_array_equal(hist["n_clients"], 10)
+    assert int(np.asarray(state.participation).sum()) == ROUNDS * 10
+    _assert_bitwise(runner(pods=pods, shards=shards, cohort=10),
+                    runner(cohort=10))
+
+
+# --------------------------------------------------- exhaustive grid (slow)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("noise", [0.0, 0.3])
+@pytest.mark.parametrize("pods,shards,chunk", [
+    pytest.param(p, s, c, marks=_needs(p * s))
+    for p in (1, 2) for s in (1, 2, 4) for c in (1, 2, 4)
+    if (p, s, c) != (1, 1, 4)      # the reference run itself
+])
+def test_full_pods_shards_chunk_grid(runner, pods, shards, chunk, noise):
+    """Acceptance grid: bit-identical trajectories (zero-noise AND σ>0)
+    across the full {pods 1, 2} × {shards 1, 2, 4} × {every cohort_chunk
+    dividing the block size} cross on forced-16-device CPU."""
+    _assert_bitwise(runner(pods=pods, shards=shards, chunk=chunk,
+                           noise=noise),
+                    runner(chunk=4, noise=noise))
+
+
+# ------------------------------------------------------- plumbing / errors
+
+
+@pytest.mark.parametrize("pods,shards",
+                         [pytest.param(2, 2, marks=_needs(4))])
+def test_trainer_pods_matches_unsharded(setup, pods, shards):
+    """FederatedTrainer(backend="engine", num_pods=P) reproduces the
+    unsharded trainer's history and participation exactly at zero noise."""
+    _, model, ds = setup
+    dp = DPConfig(clients_per_round=12, noise_multiplier=0.0, clip_norm=0.8,
+                  server_opt="momentum", server_lr=0.5, server_momentum=0.9)
+    cl = ClientConfig(local_epochs=1, batch_size=10, lr=0.3)
+    runs = {}
+    for p, s in ((1, 1), (pods, shards)):
+        pop = PopulationSim(len(ds.users), availability=0.6, seed=0)
+        tr = FederatedTrainer(model, ds, dp, cl, pop=pop, n_local_batches=2,
+                              seed=0, backend="engine", rounds_per_call=2,
+                              num_pods=p, num_shards=s)
+        tr.train(2)
+        runs[(p, s)] = tr
+    a, b = runs[(1, 1)], runs[(pods, shards)]
+    assert [r["loss"] for r in a.state.history] == \
+        [r["loss"] for r in b.state.history]
+    np.testing.assert_array_equal(a.participation, b.participation)
+    assert a.accountant.rounds == b.accountant.rounds == 2
+
+
+def test_trainer_rejects_pods_on_host_backend(setup):
+    _, model, ds = setup
+    dp = DPConfig(clients_per_round=12, noise_multiplier=0.0, clip_norm=0.8)
+    cl = ClientConfig(local_epochs=1, batch_size=10, lr=0.3)
+    with pytest.raises(ValueError, match="engine"):
+        FederatedTrainer(model, ds, dp, cl, backend="host", num_pods=2)
+
+
+def test_engine_mesh_config_entry_point(setup):
+    """Passing sim_mesh_config(S, P) is equivalent to num_shards/num_pods —
+    and a disagreeing explicit knob fails loudly instead of being silently
+    overridden."""
+    _, model, ds = setup
+    data = ds.to_device_arrays()
+    dp = DPConfig(clients_per_round=12, noise_multiplier=0.0, clip_norm=0.8)
+    cl = ClientConfig(local_epochs=1, batch_size=10, lr=0.3)
+    if len(jax.devices()) >= 4:
+        eng = SimEngine(model, data, dp, cl, availability=0.6,
+                        mesh_config=sim_mesh_config(2, 2))
+        assert (eng.num_pods, eng.num_shards, eng.total_shards) == (2, 2, 4)
+        assert eng.mesh.axis_names == ("pod", "data")
+    with pytest.raises(ValueError, match="num_pods"):
+        SimEngine(model, data, dp, cl, num_pods=4,
+                  mesh_config=sim_mesh_config(1, 2))
+    with pytest.raises(ValueError, match="num_shards"):
+        SimEngine(model, data, dp, cl, num_shards=4,
+                  mesh_config=sim_mesh_config(2, 2))
+
+
+def test_insufficient_devices_for_pods_is_a_clear_error(setup):
+    """num_pods × num_shards beyond the visible device count must fail at
+    construction, naming the XLA_FLAGS escape hatch."""
+    _, model, ds = setup
+    dp = DPConfig(clients_per_round=12, noise_multiplier=0.0, clip_norm=0.8)
+    cl = ClientConfig(local_epochs=1, batch_size=10, lr=0.3)
+    with pytest.raises(ValueError, match="xla_force_host_platform"):
+        SimEngine(model, ds.to_device_arrays(), dp, cl,
+                  num_pods=len(jax.devices()) + 1, num_shards=1)
+
+
+def test_pod_major_layout_is_the_production_layout():
+    """The engine's cohort mesh config is exactly the batch slice of the
+    production (pod, data, model) mesh: same axis names, same pod-major
+    order — a sim-validated (pods, shards) point carries over."""
+    from repro.configs.base import MULTI_POD
+    cfg = sim_mesh_config(4, 2)
+    assert cfg == MeshConfig((2, 4), ("pod", "data"))
+    assert cfg.axes == MULTI_POD.axes[:2]
+    assert sim_mesh_config(4, 1) == MeshConfig((4,), ("data",))
+    for bad in ((0, 1), (1, 0), (-2, 2)):
+        with pytest.raises(ValueError):
+            sim_mesh_config(*bad)

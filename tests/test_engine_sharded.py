@@ -161,16 +161,17 @@ def test_trainer_num_shards_validation(setup):
         FederatedTrainer(model, ds, dp, cl, backend="host", num_shards=2)
 
 
-def test_multi_axis_mesh_config_rejected(setup):
-    """The engine shards the cohort over a 1-D mesh only — a multi-pod /
-    model-parallel MeshConfig must fail loudly, not be silently flattened."""
-    from repro.configs.base import MULTI_POD
+def test_model_axis_mesh_config_rejected(setup):
+    """The engine shards the cohort over its batch axes only — a MeshConfig
+    carrying the model-parallel axis (the full production mesh) must fail
+    loudly, not be silently flattened into the cohort layout."""
+    from repro.configs.base import MULTI_POD, SINGLE_POD
     _, model, ds = setup
     dp = DPConfig(clients_per_round=12, noise_multiplier=0.0, clip_norm=0.8)
     cl = ClientConfig(local_epochs=1, batch_size=10, lr=0.3)
-    with pytest.raises(ValueError, match="1-D"):
-        SimEngine(model, ds.to_device_arrays(), dp, cl,
-                  mesh_config=MULTI_POD)
+    for cfg in (SINGLE_POD, MULTI_POD):
+        with pytest.raises(ValueError, match="batch axes"):
+            SimEngine(model, ds.to_device_arrays(), dp, cl, mesh_config=cfg)
 
 
 @pytest.mark.parametrize("num_shards", [pytest.param(2, marks=needs[2])])
@@ -238,6 +239,38 @@ def test_eval_hook_under_sharding(setup, num_shards):
                                   hists[num_shards]["eval_mask"])
     np.testing.assert_array_equal(hists[1]["eval"]["pnorm"],
                                   hists[num_shards]["eval"]["pnorm"])
+
+
+@pytest.mark.slow
+def test_checkpoint_byte_parity_across_pods_and_shards(tmp_path,
+                                                      monkeypatch):
+    """End to end through the real CLI: `launch/train.py` runs with every
+    {pods 1, 2} × {shards 1, 4} topology must write byte-identical
+    checkpoints (sha256 over the .msgpack) — the strongest statement that
+    the DP mechanism a launch ships is independent of the mesh it trained
+    on."""
+    import hashlib
+    import sys
+    from repro.launch import train as train_cli
+
+    if len(jax.devices()) < 8:
+        pytest.skip("needs 8 devices (XLA_FLAGS="
+                    "--xla_force_host_platform_device_count=16)")
+
+    digests = {}
+    for pods, shards in ((1, 1), (1, 4), (2, 1), (2, 4)):
+        out = tmp_path / f"p{pods}s{shards}"
+        argv = ["train", "--arch", "gboard-cifg-lstm", "--reduced",
+                "--vocab", "64", "--rounds", "2", "--n-users", "40",
+                "--clients-per-round", "8", "--noise-multiplier", "0.25",
+                "--seq-len", "8", "--rounds-per-call", "2",
+                "--num-pods", str(pods), "--num-shards", str(shards),
+                "--seed", "0", "--out", str(out)]
+        monkeypatch.setattr(sys, "argv", argv)
+        train_cli.main()
+        (ck,) = out.glob("*.msgpack")
+        digests[(pods, shards)] = hashlib.sha256(ck.read_bytes()).hexdigest()
+    assert len(set(digests.values())) == 1, digests
 
 
 def test_canon_pad_grid():

@@ -1,0 +1,109 @@
+"""Direct coverage for `launch/mesh.py` (previously only exercised
+indirectly through the sharded-engine suite).
+
+`make_production_mesh` builds the full (data, model) / (pod, data, model)
+device mesh; `make_cohort_mesh` builds the engine's batch-axes slice —
+1-D ``(data,)`` or 2-D ``(pod, data)`` — and must reject model-parallel
+configs with an actionable error. CPU runs force devices via
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``; cases needing more
+devices than visible are skipped.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import MULTI_POD, SINGLE_POD, MeshConfig
+from repro.launch.mesh import (COHORT_AXES, make_cohort_mesh,
+                               make_production_mesh, mesh_config)
+from repro.sharding.specs import sim_mesh_config
+
+NDEV = len(jax.devices())
+
+
+def needs(n):
+    return pytest.mark.skipif(
+        NDEV < n, reason=f"needs {n} devices (XLA_FLAGS="
+                         f"--xla_force_host_platform_device_count=16)")
+
+
+# -------------------------------------------------- make_production_mesh
+
+
+def test_mesh_config_selects_pod_layout():
+    assert mesh_config() is SINGLE_POD
+    assert mesh_config(multi_pod=True) is MULTI_POD
+    assert SINGLE_POD.axes == ("data", "model")
+    assert MULTI_POD.axes == ("pod", "data", "model")
+    assert SINGLE_POD.n_devices == 256 and MULTI_POD.n_devices == 512
+
+
+@pytest.mark.parametrize("multi_pod,shape,axes", [
+    pytest.param(False, (2, 2), ("data", "model"), marks=needs(4)),
+    pytest.param(True, (2, 2, 2), ("pod", "data", "model"), marks=needs(8)),
+    pytest.param(True, (2, 4, 2), ("pod", "data", "model"), marks=needs(16)),
+])
+def test_make_production_mesh_shape_and_axes(multi_pod, shape, axes):
+    """The shape override keeps the production axis names and order — a
+    test-scale mesh is the real mesh with smaller extents, so specs built
+    against it transfer."""
+    mesh = make_production_mesh(multi_pod=multi_pod, shape=shape)
+    assert mesh.axis_names == axes
+    assert mesh.devices.shape == shape
+    assert mesh.devices.size == int(np.prod(shape))
+
+
+def test_make_production_mesh_shape_arity_mismatch_raises():
+    with pytest.raises(ValueError, match="one entry per"):
+        make_production_mesh(multi_pod=True, shape=(2, 2))
+    with pytest.raises(ValueError, match="one entry per"):
+        make_production_mesh(shape=(2, 2, 2))
+
+
+# ----------------------------------------------------- make_cohort_mesh
+
+
+def test_cohort_axes_constant_matches_sim_configs():
+    assert tuple(sim_mesh_config(2).axes) in COHORT_AXES
+    assert tuple(sim_mesh_config(2, 2).axes) in COHORT_AXES
+
+
+@pytest.mark.parametrize("shards,pods", [
+    pytest.param(2, 1, marks=needs(2)),
+    pytest.param(2, 2, marks=needs(4)),
+    pytest.param(4, 2, marks=needs(8)),
+])
+def test_make_cohort_mesh_layouts(shards, pods):
+    """1-D and 2-D cohort meshes come back with the requested extents, the
+    batch axis names, and a pod-major device layout (C order: pod p rows
+    are contiguous runs of `shards` devices)."""
+    cfg = sim_mesh_config(shards, pods)
+    mesh = make_cohort_mesh(cfg)
+    assert mesh.axis_names == cfg.axes
+    assert mesh.devices.shape == cfg.shape
+    flat = list(mesh.devices.reshape(-1))
+    assert flat == jax.devices()[:pods * shards]  # first-N, row-major
+
+
+def test_make_cohort_mesh_rejects_model_axis_configs():
+    """The full production configs (they carry the model axis) must fail
+    with an error that names the cohort entry point — not be flattened."""
+    for cfg in (SINGLE_POD, MULTI_POD,
+                MeshConfig((1, 1, 1), ("pod", "data", "model")),
+                MeshConfig((4,), ("model",))):
+        with pytest.raises(ValueError, match="sim_mesh_config"):
+            make_cohort_mesh(cfg)
+
+
+def test_make_cohort_mesh_insufficient_devices_names_the_fix():
+    """Asking for more devices than visible fails at construction with the
+    XLA_FLAGS escape hatch in the message (and the exact count needed)."""
+    cfg = sim_mesh_config(NDEV + 1)
+    with pytest.raises(ValueError) as ei:
+        make_cohort_mesh(cfg)
+    msg = str(ei.value)
+    assert "xla_force_host_platform_device_count" in msg
+    assert str(NDEV + 1) in msg
+    # 2-D shortfalls report the *total* device need, not a per-axis count
+    cfg2 = MeshConfig((NDEV + 1, 2), ("pod", "data"))
+    with pytest.raises(ValueError, match=str(2 * (NDEV + 1))):
+        make_cohort_mesh(cfg2)

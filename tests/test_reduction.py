@@ -1,0 +1,169 @@
+"""Property tests for the canonical-reduction primitives at awkward
+topologies.
+
+The engine's CI matrix exercises the power-of-two bit-parity family
+(``num_pods × num_shards`` dividing `CANON_BLOCKS`); these tests pin down
+what the primitives guarantee *outside* it — shard counts 3, 5, 6, 7 and
+pod counts {1, 2, 4} that don't divide the canonical grid: the block count
+pads up so every boundary still lands on a block edge, nobody is ever
+truncated, and padded slots contribute an exact zero. And inside the
+family, `fold_pods`' two-level tree is proven bit-equal to the flat
+`fold_blocks` — the re-bracketing identity the whole cross-pod parity grid
+rests on.
+"""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.fl.reduction import (CANON_BLOCKS, block_sums, canon_pad,
+                                cohort_sum, fold_blocks, fold_pods,
+                                n_canon_blocks, resolve_chunk)
+
+AWKWARD_SHARDS = (3, 5, 6, 7)
+PODS = (1, 2, 4)
+
+
+# ------------------------------------------------------- grid arithmetic
+
+
+@pytest.mark.parametrize("num_pods", PODS)
+@pytest.mark.parametrize("num_shards", AWKWARD_SHARDS)
+def test_n_canon_blocks_awkward_topologies(num_shards, num_pods):
+    """The block count is the smallest multiple of the total shard count
+    ≥ CANON_BLOCKS whenever the total doesn't divide CANON_BLOCKS — both
+    pod and shard boundaries land on block boundaries, at minimal padding."""
+    total = num_shards * num_pods
+    nb = n_canon_blocks(num_shards, num_pods)
+    assert nb % total == 0                    # boundaries align
+    assert nb % num_pods == 0                 # whole blocks per pod
+    assert nb >= CANON_BLOCKS                 # never coarser than canonical
+    assert nb - total < CANON_BLOCKS or nb == total  # minimal padding
+    if CANON_BLOCKS % total == 0:
+        assert nb == CANON_BLOCKS             # the bit-parity regime
+
+
+@pytest.mark.parametrize("num_pods", PODS)
+@pytest.mark.parametrize("num_shards", AWKWARD_SHARDS)
+@pytest.mark.parametrize("n", (1, 7, 10, 40, 333))
+def test_canon_pad_never_truncates(n, num_shards, num_pods):
+    """The padded buffer holds every one of the n devices (pad ≥ n), splits
+    into whole blocks, and each of the total shards gets the same whole
+    number of slots — no remainder anywhere to silently drop."""
+    total = num_shards * num_pods
+    nb = n_canon_blocks(num_shards, num_pods)
+    p = canon_pad(n, num_shards, num_pods)
+    assert p >= n
+    assert p % nb == 0 and p % total == 0
+    # minimality: one block less would not fit n (or violate alignment)
+    assert p - nb < max(n, 1)
+
+
+@pytest.mark.parametrize("num_pods", PODS)
+@pytest.mark.parametrize("num_shards", AWKWARD_SHARDS)
+def test_resolve_chunk_divides_awkward_blocks(num_shards, num_pods):
+    """Auto-resolved chunks divide the block size of every awkward grid, so
+    the streaming fold's chunk boundaries stay inside block boundaries."""
+    nb = n_canon_blocks(num_shards, num_pods)
+    for cohort in (10, 24, 100):
+        blk = canon_pad(cohort, num_shards, num_pods) // nb
+        c = resolve_chunk(None, blk)
+        assert c >= 1 and blk % c == 0
+        # strict mode still rejects non-divisors on these grids
+        if blk > 1:
+            with pytest.raises(ValueError):
+                resolve_chunk(blk + 1, blk)
+
+
+def test_validation_errors():
+    for bad in (0, -1):
+        with pytest.raises(ValueError):
+            n_canon_blocks(bad, 1)
+        with pytest.raises(ValueError):
+            n_canon_blocks(1, bad)
+    with pytest.raises(ValueError, match="divide the block count"):
+        fold_pods(jnp.zeros((8, 3)), num_pods=3)
+
+
+# --------------------------------------------------- fold_pods identity
+
+
+@pytest.mark.parametrize("num_pods", (1, 2, 4, 8))
+def test_fold_pods_rebracketing_identity(num_pods):
+    """Inside the parity family (power-of-two pod counts dividing the block
+    count) fold_pods is bit-equal to the flat fold_blocks: a pod partial is
+    an internal node of the balanced tree. This is the identity that makes
+    the engine's hierarchical cross-pod reduction a no-op on the bits."""
+    blocks = jax.random.normal(jax.random.PRNGKey(0), (CANON_BLOCKS, 37))
+    np.testing.assert_array_equal(
+        np.asarray(fold_pods(blocks, num_pods)),
+        np.asarray(fold_blocks(blocks)))
+
+
+def test_fold_pods_nondividing_grid_is_self_stable():
+    """Outside the power-of-two regime (12 blocks, 4 pods of 3) the two-
+    level fold is a *different* association from the flat fold — documented
+    behaviour: awkward grids are only bit-stable against themselves."""
+    blocks = jax.random.normal(jax.random.PRNGKey(1), (12, 5),
+                               dtype=jnp.float32)
+    a = np.asarray(fold_pods(blocks, 4))
+    b = np.asarray(fold_pods(blocks, 4))
+    np.testing.assert_array_equal(a, b)       # deterministic
+    # and it still sums the same multiset of values (to float tolerance)
+    np.testing.assert_allclose(a, np.asarray(blocks.sum(axis=0)), rtol=1e-5)
+
+
+# -------------------------------------------- cohort_sum on awkward grids
+
+
+@pytest.mark.parametrize("num_pods", PODS)
+@pytest.mark.parametrize("num_shards", AWKWARD_SHARDS)
+def test_cohort_sum_awkward_grid_counts_everybody(num_shards, num_pods):
+    """On every awkward (shards, pods) grid the masked cohort sum counts
+    each live slot exactly once (sum of a 0/1 indicator == live count) and
+    padded/masked slots contribute exactly zero even when they hold
+    garbage."""
+    nb = n_canon_blocks(num_shards, num_pods)
+    n = 26                                    # doesn't divide anything here
+    padded = canon_pad(n, num_shards, num_pods)
+    live = 19
+    mask = jnp.arange(padded) < live
+    # indicator tree: each live slot contributes exactly 1.0
+    ones = {"x": jnp.ones((padded, 3))}
+    out = cohort_sum(ones, mask, nb, num_pods)
+    np.testing.assert_array_equal(np.asarray(out["x"]), float(live))
+    # garbage in masked slots changes nothing, bitwise
+    vals = jax.random.normal(jax.random.PRNGKey(2), (padded, 3))
+    poisoned = {"x": jnp.where(mask[:, None], vals, 1e30)}
+    clean = {"x": vals * mask[:, None]}
+    np.testing.assert_array_equal(
+        np.asarray(cohort_sum(poisoned, mask, nb, num_pods)["x"]),
+        np.asarray(cohort_sum(clean, mask, nb, num_pods)["x"]))
+
+
+def test_cohort_sum_parity_family_is_one_bit_class():
+    """Every (shards, pods) topology whose total divides CANON_BLOCKS
+    produces the same bits from cohort_sum — the single-device statement of
+    the engine's cross-topology acceptance grid."""
+    padded = canon_pad(26)                    # same grid for the family
+    mask = jnp.arange(padded) < 26
+    vals = {"x": jax.random.normal(jax.random.PRNGKey(3), (padded, 4))}
+    ref = np.asarray(cohort_sum(vals, mask, CANON_BLOCKS, 1)["x"])
+    fam = [(s, p) for s, p in itertools.product((1, 2, 4, 8), (1, 2, 4, 8))
+           if CANON_BLOCKS % (s * p) == 0]
+    assert len(fam) > 5
+    for s, p in fam:
+        assert canon_pad(26, s, p) == padded
+        got = np.asarray(cohort_sum(vals, mask, n_canon_blocks(s, p), p)["x"])
+        np.testing.assert_array_equal(got, ref, err_msg=f"shards={s} pods={p}")
+
+
+def test_block_sums_partition():
+    """block_sums partitions: block partials sum (in any order) to the same
+    total the flat sum gives, to float tolerance, on a non-dividing grid."""
+    a = jax.random.normal(jax.random.PRNGKey(4), (24, 6))
+    for nb in (3, 6, 12):
+        np.testing.assert_allclose(np.asarray(block_sums(a, nb).sum(axis=0)),
+                                   np.asarray(a.sum(axis=0)), rtol=1e-5)

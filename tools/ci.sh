@@ -41,10 +41,11 @@ if [[ "${1:-}" == "--slow" ]]; then
 fi
 
 echo "== smoke: compiled simulation engine benchmark (dry run) =="
-# force 8 host devices so the per-shard-count records (shards={1,2,4,8})
-# land in BENCH_ci.json even on a single-accelerator box
+# force 16 host devices so both the per-shard-count records
+# (shards={1,2,4,8}) and the cross-pod grid (pods×shards up to 4×2) land
+# in BENCH_ci.json even on a single-accelerator box
 rm -f BENCH_ci.json
-XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
+XLA_FLAGS="--xla_force_host_platform_device_count=16${XLA_FLAGS:+ $XLA_FLAGS}" \
   BENCH_JSON=BENCH_ci.json PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
   python benchmarks/bench_sim_engine.py --dry-run
 test -s BENCH_ci.json || { echo "FAIL: BENCH_ci.json not written" >&2; exit 1; }
@@ -53,6 +54,12 @@ test -s BENCH_ci.json || { echo "FAIL: BENCH_ci.json not written" >&2; exit 1; }
 # up without waiting for the nightly cohort sweep
 grep -q "client_step/local_sgd" BENCH_ci.json || {
   echo "FAIL: client-step microbench record missing from BENCH_ci.json" >&2
+  exit 1
+}
+# the cross-pod reduction must leave a per-PR trace too: a pods=2 record
+# proves the 2-D (pod, data) engine path actually ran in the smoke
+grep -q "sim_engine/pods/.*pods=2" BENCH_ci.json || {
+  echo "FAIL: sim_engine pods=2 record missing from BENCH_ci.json" >&2
   exit 1
 }
 echo "BENCH_ci.json records:"
