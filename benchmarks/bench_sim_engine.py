@@ -43,6 +43,16 @@ records isolate the layout's collective cost. ``BENCH_ci.json`` carries a
 ``sim_engine/pods=2`` point from the dry run so cross-pod throughput is
 tracked per PR.
 
+``--population-sweep`` benchmarks the *streamed population backend*
+(`SimEngine(population_backend="streamed")`, PR 7) across population sizes
+10³ → 10⁶: the corpus stays host-resident (a `ReplicatedPopulationStore`
+view at large N) and only two ping-ponged cohort buffers live on device, so
+rounds/sec should stay flat in N while ``device_corpus_bytes`` stays
+constant — vs the device-resident reference whose corpus residency grows
+linearly. The dry run emits one streamed + one device record into
+``BENCH_ci.json`` (asserted by `tools/ci.sh`); the nightly full sweep lands
+in ``BENCH_population.json``.
+
 ``--client-step`` (also emitted after every full/dry run) is the
 local-SGD *numerator* microbench: µs per jit'd client step
 (``value_and_grad`` of the model loss on one client batch) per
@@ -262,6 +272,78 @@ def pod_sweep(dry_run: bool = False):
     return results
 
 
+def _population_record(model, data, dp, cl, *, backend, n_users, rounds,
+                       warmup, rpc, ref_rps=None):
+    """One population-scale record: rounds/sec through `SimEngine.run` at
+    this ``population_backend``, plus the memory accounting that is the
+    point of the streamed backend — ``device_corpus_bytes`` (what the
+    backend keeps resident on device for the population payload: the whole
+    padded corpus, or two ping-ponged cohort buffers independent of N) and
+    ``host_corpus_bytes`` (the virtual population payload)."""
+    eng = SimEngine(model, data, dp, cl, n_local_batches=2,
+                    availability=0.5, rounds_per_call=rpc,
+                    population_backend=backend)
+    state = eng.init_state(model.init(jax.random.PRNGKey(1)), seed=0)
+    # warmup/rounds are multiples of rpc so the device backend's k-round
+    # scan compiles exactly once, outside the timed window
+    state, _ = eng.run(state, warmup)
+    t0 = time.perf_counter()
+    state, _ = eng.run(state, rounds)
+    jax.block_until_ready(state.params)
+    rps = rounds / (time.perf_counter() - t0)
+    row_bytes = eng.emax * eng.row_len * 4
+    dev = (n_users * row_bytes if backend == "device"
+           else 2 * eng.padded * row_bytes)
+    derived = (f"rounds_per_sec={rps:.3f};"
+               f"device_corpus_bytes={dev};"
+               f"host_corpus_bytes={n_users * row_bytes};"
+               f"cohort_padded={eng.padded}")
+    if ref_rps is not None:
+        derived += f";vs_device_base={rps / ref_rps:.2f}x"
+    emit(f"sim_engine/population/n_users={n_users}/backend={backend}",
+         1e6 / rps, derived)
+    return rps
+
+
+def population_sweep(dry_run: bool = False):
+    """--population-sweep: rounds/sec across population sizes 10³ → 10⁶ for
+    the streamed (host-resident corpus, double-buffered cohort prefetch)
+    backend, with the device-resident backend as the N=10³ reference — the
+    headline claim is rounds/sec flat in N with per-round device residency
+    independent of N. Large N uses `ReplicatedPopulationStore` (an O(1)-host-
+    memory tiled view over a 10³-user base), so the sweep measures sampler +
+    gather + transfer + compute at true fleet id-space size without a
+    multi-GB corpus build."""
+    from repro.data.population_store import (InMemoryPopulationStore,
+                                             ReplicatedPopulationStore)
+    base_users = 200 if dry_run else 1000
+    cohort = 8 if dry_run else 200
+    rpc = 2 if dry_run else 10
+    rounds = 4 if dry_run else 30
+    warmup = 2 if dry_run else 10
+    cfg, model, ds = _setup(base_users)
+    base = InMemoryPopulationStore.from_dataset(ds)
+    dp = DPConfig(clients_per_round=cohort, noise_multiplier=0.3,
+                  clip_norm=0.8, server_opt="momentum", server_lr=0.5,
+                  server_momentum=0.9)
+    cl = ClientConfig(local_epochs=1, batch_size=10, lr=0.3)
+    # device-resident reference at base N only (it materializes the corpus
+    # on device, which is exactly the wall this sweep demonstrates)
+    ref = _population_record(model, base.device_arrays(), dp, cl,
+                             backend="device", n_users=base_users,
+                             rounds=rounds, warmup=warmup, rpc=rpc)
+    sizes = [base_users] if dry_run else [1000, 10_000, 100_000, 1_000_000]
+    results = {}
+    for n in sizes:
+        store = (base if n == base_users
+                 else ReplicatedPopulationStore(base, n))
+        results[n] = _population_record(model, store, dp, cl,
+                                        backend="streamed", n_users=n,
+                                        rounds=rounds, warmup=warmup,
+                                        rpc=rpc, ref_rps=ref)
+    return results
+
+
 def run(dry_run: bool = False, shards=(1, 2, 4, 8)):
     cohorts = [8] if dry_run else [50, 200, 1000]
     host_rounds = 2 if dry_run else 5
@@ -348,6 +430,11 @@ if __name__ == "__main__":
                     help="sweep cohort_chunk at cohorts {200, 1000, 5000}: "
                          "rounds/sec (steady-state, compile split out) + "
                          "peak live-buffer bytes per record")
+    ap.add_argument("--population-sweep", action="store_true",
+                    help="sweep population size 10^3 → 10^6 with the "
+                         "streamed (host-resident corpus) backend vs the "
+                         "device-resident reference: rounds/sec + device/"
+                         "host corpus residency per record")
     ap.add_argument("--pod-sweep", action="store_true",
                     help="sweep (pods, shards) topologies of the 2-D "
                          "(pod, data) cohort mesh: rounds/sec per grid "
@@ -359,6 +446,8 @@ if __name__ == "__main__":
     args = ap.parse_args()
     if args.client_step:
         client_step_bench(dry_run=args.dry_run)
+    elif args.population_sweep:
+        population_sweep(dry_run=args.dry_run)
     else:
         if not (args.chunk_sweep or args.pod_sweep):
             run(dry_run=args.dry_run,
@@ -367,4 +456,6 @@ if __name__ == "__main__":
             chunk_sweep(dry_run=args.dry_run)
         if args.pod_sweep or args.dry_run:
             pod_sweep(dry_run=args.dry_run)
+        if args.dry_run:
+            population_sweep(dry_run=True)
         client_step_bench(dry_run=args.dry_run)

@@ -23,12 +23,17 @@ def sentences_to_examples(sentences: Sequence[Sequence[int]], seq_len: int,
                           max_examples: Optional[int] = None) -> np.ndarray:
     """Pack sentences into fixed (n, seq_len+1) windows (inputs+shifted labels
     share the window; PAD-masked loss). One sentence per window."""
+    if max_examples is not None and max_examples < 0:
+        raise ValueError(f"max_examples must be >= 0, got {max_examples}")
     rows = []
     for s in sentences:
+        # an explicit cap of 0 means zero examples, not "no cap"
+        if max_examples is not None and len(rows) >= max_examples:
+            break
         s = list(s)[: seq_len + 1]
         rows.append(s + [PAD] * (seq_len + 1 - len(s)))
-        if max_examples and len(rows) >= max_examples:
-            break
+    if not rows:
+        return np.zeros((0, seq_len + 1), np.int32)
     return np.asarray(rows, np.int32)
 
 
@@ -138,7 +143,17 @@ class FederatedDataset:
           available, exempt from Pace Steering).
         """
         n = len(self.users)
-        emax = max_examples or max(u.examples.shape[0] for u in self.users)
+        empty = [u.user_id for u in self.users if u.examples.shape[0] == 0]
+        if empty:
+            raise ValueError(
+                f"users {empty[:5]} hold zero examples — tiling an empty "
+                "shard would silently serve garbage (np.resize on an empty "
+                "range tiles nothing); give them data or drop them")
+        emax = (max_examples if max_examples is not None
+                else max(u.examples.shape[0] for u in self.users))
+        if emax < 1:
+            raise ValueError(f"max_examples must be >= 1 for the padded "
+                             f"corpus tensor, got {max_examples}")
         ex = np.zeros((n, emax, self.seq_len + 1), np.int32)
         counts = np.zeros((n,), np.int32)
         synth = np.zeros((n,), bool)
@@ -154,6 +169,12 @@ class FederatedDataset:
         """Fixed-shape (n_batches, B, S) stack for the vmapped/jit round path;
         examples are tiled if the user has fewer than n_batches·B."""
         ex = self.users[user_id].examples
+        if ex.shape[0] == 0:
+            raise ValueError(
+                f"user {user_id} holds zero examples — cannot tile an empty "
+                "shard into a fixed-shape client tensor (np.resize on an "
+                "empty range tiles garbage); give the user data or exclude "
+                "it from sampling")
         need = n_batches * batch_size
         idx = rng.permutation(np.resize(np.arange(ex.shape[0]), need))
         ex = ex[idx].reshape(n_batches, batch_size, -1)

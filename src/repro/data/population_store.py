@@ -1,0 +1,270 @@
+"""Host-resident population corpus behind a per-round cohort gather.
+
+``FederatedDataset.to_device_arrays()`` materializes the *whole* padded
+corpus on device — fine at 10³ users, a hard wall at 10⁶–10⁷, and nothing
+like the production fleet the paper trains on, where the server never holds
+more than the sampled cohort's data per round. A :class:`PopulationStore`
+keeps the corpus on the host (RAM or memory-mapped disk shards) and serves
+exactly one cohort's worth of examples per round to the streamed engine
+backend (`repro.fl.engine.SimEngine(population_backend="streamed")`).
+
+The stored representation is deliberately *identical* to the device tensor
+the engine's device backend gathers from:
+
+* ``examples`` — (N, E_max, seq_len+1) int32, each user's real examples
+  **tiled** to E_max so every slot holds a valid example;
+* ``counts`` — (N,) int32 true example counts (the engine draws uniform
+  indices in ``[0, counts[u])`` so tiling never skews the distribution);
+* ``synthetic`` — (N,) bool secret-sharer mask.
+
+Because the values a store serves for user ``u`` are bit-identical to row
+``u`` of the device-resident tensor, the streamed backend's trajectories are
+bit-exact against the device backend — the headline parity contract of
+``tests/test_engine_streamed.py``.
+
+Three implementations:
+
+* :class:`InMemoryPopulationStore` — host numpy arrays (tests, small runs);
+* :class:`MmapPopulationStore` — an on-disk directory of fixed-size user
+  shards (``examples-00000-of-00004.npy`` …) opened with
+  ``np.load(mmap_mode="r")``, so the OS pages in only the users a round
+  actually touches. Written by :func:`write_population_store` /
+  ``tools/build_corpus.py``;
+* :class:`ReplicatedPopulationStore` — an O(1)-memory view tiling a base
+  store to N users (``uid → uid % base.n_users``), the population-sweep
+  tool for benchmarking 10⁶–10⁷-user fleets without 10-GB corpus builds.
+
+The small per-user vectors (``counts``, ``synthetic``) always live fully in
+host RAM — 5 bytes/user, 5 MB at 10⁶ — only the O(N·E_max·seq_len) example
+payload is sharded/mapped/virtualized.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, Optional, Union
+
+import numpy as np
+
+STORE_META = "meta.json"
+STORE_VERSION = 1
+DEFAULT_SHARD_USERS = 4096
+
+
+def _validate_arrays(examples: np.ndarray, counts: np.ndarray,
+                     synthetic: np.ndarray) -> None:
+    if examples.ndim != 3:
+        raise ValueError(f"examples must be (N, E_max, seq_len+1), got "
+                         f"shape {examples.shape}")
+    n = examples.shape[0]
+    if counts.shape != (n,) or synthetic.shape != (n,):
+        raise ValueError(
+            f"counts {counts.shape} / synthetic {synthetic.shape} must both "
+            f"be ({n},) to match examples {examples.shape}")
+    if n and int(counts.min()) < 1:
+        empty = np.nonzero(np.asarray(counts) < 1)[0][:5]
+        raise ValueError(
+            f"population store: users {empty.tolist()} have no examples — "
+            "every user must hold >= 1 example (the engine draws indices in "
+            "[0, counts[u]) and tiling an empty shard is undefined); drop "
+            "them upstream or give them data")
+
+
+class PopulationStore:
+    """Read-only host-side population corpus: per-user tiled example rows
+    plus the small per-user vectors. Subclasses implement :meth:`gather`."""
+
+    n_users: int
+    emax: int          # examples per user after tiling (E_max)
+    row_len: int       # seq_len + 1 (window width incl. shifted label)
+    counts: np.ndarray     # (N,) int32
+    synthetic: np.ndarray  # (N,) bool
+
+    def gather(self, ids) -> np.ndarray:
+        """(len(ids), E_max, seq_len+1) int32 tiled example rows for the
+        given user ids (any order, duplicates fine — a padded cohort aliases
+        slot 0)."""
+        raise NotImplementedError
+
+    def gather_counts(self, ids) -> np.ndarray:
+        return np.ascontiguousarray(self.counts[np.asarray(ids, np.int64)],
+                                    dtype=np.int32)
+
+    def device_arrays(self) -> Dict[str, np.ndarray]:
+        """Materialize the whole population as the engine's device-backend
+        dict — the compatibility escape hatch (and the round-trip test
+        oracle). O(N·E_max·seq_len) host memory: only call at small N."""
+        return {"examples": self.gather(np.arange(self.n_users)),
+                "counts": np.asarray(self.counts, np.int32),
+                "synthetic": np.asarray(self.synthetic, bool)}
+
+    # ------------------------------------------------------------- stats
+    @property
+    def nbytes_per_user(self) -> int:
+        return self.emax * self.row_len * 4
+
+    def _check_ids(self, ids: np.ndarray) -> np.ndarray:
+        ids = np.asarray(ids, np.int64)
+        if ids.size and (ids.min() < 0 or ids.max() >= self.n_users):
+            raise IndexError(
+                f"user ids out of range [0, {self.n_users}): "
+                f"[{ids.min()}, {ids.max()}]")
+        return ids
+
+
+class InMemoryPopulationStore(PopulationStore):
+    """Population corpus fully in host RAM — the test/small-run path and the
+    base payload the replicated/mmap stores are built from."""
+
+    def __init__(self, examples: np.ndarray, counts: np.ndarray,
+                 synthetic: np.ndarray):
+        examples = np.asarray(examples, np.int32)
+        counts = np.asarray(counts, np.int32)
+        synthetic = np.asarray(synthetic, bool)
+        _validate_arrays(examples, counts, synthetic)
+        self.examples = examples
+        self.counts = counts
+        self.synthetic = synthetic
+        self.n_users = int(examples.shape[0])
+        self.emax = int(examples.shape[1])
+        self.row_len = int(examples.shape[2])
+
+    @classmethod
+    def from_arrays(cls, data: Dict[str, np.ndarray]
+                    ) -> "InMemoryPopulationStore":
+        """From a ``FederatedDataset.to_device_arrays()``-style dict."""
+        return cls(data["examples"], data["counts"], data["synthetic"])
+
+    @classmethod
+    def from_dataset(cls, dataset, max_examples: Optional[int] = None
+                     ) -> "InMemoryPopulationStore":
+        """From a ``FederatedDataset`` — same tiling as
+        ``to_device_arrays`` so the two representations are bit-identical."""
+        return cls.from_arrays(dataset.to_device_arrays(max_examples))
+
+    def gather(self, ids) -> np.ndarray:
+        return np.ascontiguousarray(self.examples[self._check_ids(ids)])
+
+
+class ReplicatedPopulationStore(PopulationStore):
+    """O(1)-memory N-user view over a base store: ``uid → uid % base_n``.
+
+    The population-scale benchmarking tool: a 10⁶-user fleet with realistic
+    per-user payloads, no 10-GB corpus build, no disk. Only the small
+    per-user vectors are physically tiled (5 bytes/user). Secret-sharer
+    semantics do not survive replication (a canary's n_u multiplies), so
+    this is a throughput/memory instrument, not a measurement population.
+    """
+
+    def __init__(self, base: PopulationStore, n_users: int):
+        if n_users < base.n_users:
+            raise ValueError(f"n_users={n_users} must be >= the base "
+                             f"store's {base.n_users}")
+        self.base = base
+        self.n_users = int(n_users)
+        self.emax = base.emax
+        self.row_len = base.row_len
+        reps = -(-self.n_users // base.n_users)
+        self.counts = np.tile(base.counts, reps)[: self.n_users]
+        self.synthetic = np.tile(base.synthetic, reps)[: self.n_users]
+
+    def gather(self, ids) -> np.ndarray:
+        return self.base.gather(self._check_ids(ids) % self.base.n_users)
+
+
+class MmapPopulationStore(PopulationStore):
+    """On-disk population store: ``meta.json`` + ``counts.npy`` +
+    ``synthetic.npy`` + fixed-size user shards
+    ``examples-00000-of-00004.npy``, each a (shard_users, E_max, seq_len+1)
+    int32 ``.npy`` opened lazily with ``np.load(mmap_mode="r")`` — the OS
+    pages in only the rows a cohort gather touches, so host RSS is
+    O(touched users), not O(N)."""
+
+    def __init__(self, path: Union[str, Path]):
+        self.path = Path(path)
+        meta_path = self.path / STORE_META
+        if not meta_path.is_file():
+            raise FileNotFoundError(
+                f"{self.path} is not a population store (no {STORE_META}); "
+                "build one with tools/build_corpus.py or "
+                "write_population_store()")
+        self.meta = json.loads(meta_path.read_text())
+        if self.meta.get("version") != STORE_VERSION:
+            raise ValueError(f"population store version "
+                             f"{self.meta.get('version')} != reader version "
+                             f"{STORE_VERSION} ({meta_path})")
+        self.n_users = int(self.meta["n_users"])
+        self.emax = int(self.meta["emax"])
+        self.row_len = int(self.meta["row_len"])
+        self.shard_users = int(self.meta["shard_users"])
+        self.n_shards = int(self.meta["n_shards"])
+        self.counts = np.load(self.path / "counts.npy")
+        self.synthetic = np.load(self.path / "synthetic.npy")
+        _expect = -(-self.n_users // self.shard_users)
+        if self.n_shards != _expect:
+            raise ValueError(
+                f"corrupt store: n_shards={self.n_shards} but "
+                f"{self.n_users} users / {self.shard_users} per shard "
+                f"needs {_expect}")
+        self._shards: Dict[int, np.ndarray] = {}
+
+    def shard_file(self, s: int) -> Path:
+        return self.path / (f"examples-{s:05d}-of-{self.n_shards:05d}.npy")
+
+    def _shard(self, s: int) -> np.ndarray:
+        if s not in self._shards:
+            self._shards[s] = np.load(self.shard_file(s), mmap_mode="r")
+        return self._shards[s]
+
+    def gather(self, ids) -> np.ndarray:
+        ids = self._check_ids(ids)
+        out = np.empty((ids.shape[0], self.emax, self.row_len), np.int32)
+        shard_of = ids // self.shard_users
+        for s in np.unique(shard_of):
+            sel = shard_of == s
+            out[sel] = self._shard(int(s))[ids[sel] - s * self.shard_users]
+        return out
+
+
+def write_population_store(path: Union[str, Path], store: PopulationStore,
+                           shard_users: int = DEFAULT_SHARD_USERS,
+                           seq_len: Optional[int] = None) -> Path:
+    """Serialize any :class:`PopulationStore` (or in-memory arrays wrapped
+    in one) to the sharded mmap directory format. Streams one shard at a
+    time through :meth:`PopulationStore.gather`, so writing a replicated
+    10⁶-user store needs O(shard) host memory."""
+    if shard_users < 1:
+        raise ValueError(f"shard_users must be >= 1, got {shard_users}")
+    path = Path(path)
+    path.mkdir(parents=True, exist_ok=True)
+    n = store.n_users
+    n_shards = -(-n // shard_users)
+    for s in range(n_shards):
+        lo, hi = s * shard_users, min((s + 1) * shard_users, n)
+        block = store.gather(np.arange(lo, hi))
+        np.save(path / f"examples-{s:05d}-of-{n_shards:05d}.npy", block)
+    np.save(path / "counts.npy", np.asarray(store.counts, np.int32))
+    np.save(path / "synthetic.npy", np.asarray(store.synthetic, bool))
+    meta = {"version": STORE_VERSION, "n_users": n, "emax": store.emax,
+            "row_len": store.row_len,
+            "seq_len": int(seq_len if seq_len is not None
+                           else store.row_len - 1),
+            "shard_users": int(shard_users), "n_shards": n_shards,
+            "dtype": "int32"}
+    (path / STORE_META).write_text(json.dumps(meta, indent=1))
+    return path
+
+
+def as_population_store(data) -> PopulationStore:
+    """Normalize the engine's ``data`` argument: a store passes through, a
+    ``to_device_arrays()``-style dict wraps in-memory, a path opens the
+    on-disk format."""
+    if isinstance(data, PopulationStore):
+        return data
+    if isinstance(data, dict):
+        return InMemoryPopulationStore.from_arrays(data)
+    if isinstance(data, (str, Path)):
+        return MmapPopulationStore(data)
+    raise TypeError(
+        f"expected a PopulationStore, a to_device_arrays() dict, or a store "
+        f"path, got {type(data).__name__}")

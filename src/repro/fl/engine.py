@@ -83,6 +83,40 @@ shrink the round and break the σ = zS/(qN) calibration.
 the *same* traced round body from the same PRNG stream, so they sample
 identical cohorts and are numerically interchangeable — `tests/test_engine.py`
 asserts trajectory parity and zero-noise bit-exactness.
+
+Streamed population backend (``population_backend="streamed"``)
+---------------------------------------------------------------
+
+The default (``"device"``) backend holds the whole padded corpus tensor on
+device — O(N·E_max·seq_len) device memory, a hard wall at 10⁶–10⁷ users.
+The streamed backend keeps the corpus host-resident behind a
+`data.population_store.PopulationStore` (RAM, mmap shards on disk, or an
+O(1) replicated view) and stages exactly one cohort per round:
+
+* the K-round ``lax.scan`` becomes a **host-driven round loop** around two
+  jitted bodies compiled once each — ``_sample_body`` (availability draw,
+  Pace-Steering/Poisson cohort selection, population-vector updates; only
+  O(N)-*vector* state ever touches the device) and ``_compute_body`` (the
+  gather → local SGD → clip → noise → server step, donated params/opt);
+* after round k's cohort ids come back from the sampler (a tiny transfer),
+  the host gathers their rows from the store and ``jax.device_put``s them
+  into one of **two ping-ponged (padded, E_max, seq_len+1) cohort
+  buffers** while round k−1's chunked compute scan is still in flight —
+  the ``cohort_chunk`` streaming boundaries (PR 4) are what the transfer
+  overlaps. Per-round device corpus residency is O(2·cohort·E_max),
+  independent of N;
+* the sampler chain (PRNG key, ``last_round``, ``participation``) is
+  independent of the params chain, which is what makes the one-round
+  lookahead legal: round k+1's cohort is fully determined before round k's
+  server step lands.
+
+Bit-exactness: the sampler consumes the identical PRNG splits as the fused
+device round body, and the compute body draws per-slot example indices from
+the *same* per-slot keys against the same ``counts[u]`` bounds — gathering
+``examples[u]`` from a staged host buffer instead of the device-resident
+corpus tensor selects bit-identical token rows, so streamed trajectories
+are **bit-exact against the device backend** across the whole
+{pods} × {shards} × {chunk} parity grid (`tests/test_engine_streamed.py`).
 """
 from __future__ import annotations
 
@@ -98,6 +132,7 @@ from repro.configs.base import ClientConfig, DPConfig, MeshConfig
 from repro.core.clipping import CLIP_PATHS
 from repro.core.dp_fedavg import finalize_round, server_step
 from repro.core.server_optim import ServerOptState, init_state
+from repro.data.population_store import PopulationStore, as_population_store
 from repro.data.tokenizer import PAD
 from repro.fl.client import (client_updates, local_deltas,
                              stream_block_sums)
@@ -113,9 +148,12 @@ from repro.sharding.specs import (batch_axes, cohort_spec,
                                   sim_mesh_config)
 from repro.utils.compat import shard_map
 
-__all__ = ["CANON_BLOCKS", "EngineState", "SimEngine", "canon_pad",
-           "cohort_sum", "gather_client_batches", "n_canon_blocks",
+__all__ = ["CANON_BLOCKS", "EngineState", "POPULATION_BACKENDS", "SimEngine",
+           "canon_pad", "cohort_sum", "gather_client_batches",
+           "gather_cohort_batches", "n_canon_blocks",
            "pace_steering_weights", "poisson_select", "sample_cohort"]
+
+POPULATION_BACKENDS = ("device", "streamed")
 
 
 class EngineState(NamedTuple):
@@ -202,6 +240,42 @@ def gather_client_batches(examples, counts, ids, keys,
     return batch
 
 
+def gather_cohort_batches(cohort_examples, cohort_counts, keys,
+                          n_batches: int, batch_size: int):
+    """Slot-aligned analogue of :func:`gather_client_batches` for the
+    streamed population backend: the cohort's example rows arrive as a
+    staged (C, E_max, seq_len+1) buffer (one row-block per *slot*, already
+    host-gathered from the `PopulationStore`) instead of being gathered
+    from the device-resident corpus tensor by user id.
+
+    Bit-parity contract: ``cohort_examples[slot] == examples[ids[slot]]``
+    and ``cohort_counts[slot] == counts[ids[slot]]`` by construction, and
+    ``keys`` is the same per-slot key stack the device backend splits — so
+    the uniform index draw and the selected token rows are bit-identical to
+    the device backend's, whatever the population size behind the store."""
+    need = n_batches * batch_size
+
+    def one(ex_u, cnt, key):
+        idx = jax.random.randint(key, (need,), 0, cnt)
+        return ex_u[idx].reshape(n_batches, batch_size, -1)
+
+    rows = jax.vmap(one)(cohort_examples, cohort_counts, keys)
+    batch = {"tokens": rows[..., :-1], "labels": rows[..., 1:]}
+    batch["mask"] = (batch["labels"] != PAD).astype(jnp.float32)
+    return batch
+
+
+class _SamplerState(NamedTuple):
+    """Device-resident slice of :class:`EngineState` the streamed backend's
+    sampler owns — deliberately disjoint from (params, opt_state), which is
+    what makes the one-round cohort lookahead legal."""
+
+    key: jax.Array
+    last_round: jax.Array
+    participation: jax.Array
+    round_idx: jax.Array
+
+
 class SimEngine:
     """K-rounds-per-jit DP-FedAvg simulator over a device-resident population.
 
@@ -241,6 +315,16 @@ class SimEngine:
     (the validated reference / benchmark baseline — its XLA-reduction
     association is *not* bit-comparable to the streaming family).
 
+    ``population_backend`` selects where the corpus lives: ``"device"``
+    (default) keeps the whole padded tensor device-resident (``data`` is a
+    ``to_device_arrays()`` dict or a `PopulationStore` to materialize);
+    ``"streamed"`` keeps it host-resident behind a `PopulationStore`
+    (``data`` may also be a dict — wrapped in-memory — or a store path) and
+    stages one cohort per round through two ping-ponged device buffers with
+    a one-round prefetch lookahead — O(2·cohort·E_max) device corpus
+    residency independent of N, bit-exact against ``"device"`` (see the
+    module docstring).
+
     ``clip_path`` selects the per-client clip→accumulate implementation:
     ``"fused"`` (default) runs the flat-parameter Pallas ``dp_clip`` kernels
     (interpret mode on CPU, compiled on TPU); ``"tree"`` the pytree
@@ -251,8 +335,8 @@ class SimEngine:
     rounds carry zeros (see history keys ``eval`` / ``eval_mask``).
     """
 
-    def __init__(self, model: Model, data: Dict[str, np.ndarray],
-                 dp: DPConfig, client: ClientConfig, *,
+    def __init__(self, model: Model, data, dp: DPConfig,
+                 client: ClientConfig, *,
                  n_local_batches: int = 4, availability: float = 0.1,
                  pace_cooldown: int = 50, pace_penalty: float = 0.01,
                  rounds_per_call: int = 8,
@@ -263,6 +347,7 @@ class SimEngine:
                  mesh_config: Optional[MeshConfig] = None,
                  cohort_chunk: Optional[int] = None,
                  clip_path: str = "fused",
+                 population_backend: str = "device",
                  eval_fn: Optional[Callable] = None, eval_every: int = 1):
         self.model = model
         self.dp = dp
@@ -308,10 +393,32 @@ class SimEngine:
                      if self.total_shards > 1 else None)
         self.eval_fn = eval_fn
         self.eval_every = max(int(eval_every), 1)
-        self.examples = jnp.asarray(data["examples"])
-        self.counts = jnp.asarray(data["counts"])
-        self.synthetic = jnp.asarray(data["synthetic"])
-        self.n_users = int(self.examples.shape[0])
+        if population_backend not in POPULATION_BACKENDS:
+            raise ValueError(f"population_backend must be one of "
+                             f"{POPULATION_BACKENDS}, got "
+                             f"{population_backend!r}")
+        self.population_backend = population_backend
+        if population_backend == "device":
+            # whole-corpus device residency: the original O(N·E_max·seq_len)
+            # layout (a PopulationStore materializes through device_arrays())
+            if isinstance(data, PopulationStore):
+                data = data.device_arrays()
+            self.store = None
+            self.examples = jnp.asarray(data["examples"])
+            self.counts = jnp.asarray(data["counts"])
+            synth_np = np.asarray(data["synthetic"], bool)
+            self.emax = int(self.examples.shape[1])
+            self.row_len = int(self.examples.shape[2])
+        else:
+            # host-resident corpus: only the per-user vectors + two staged
+            # cohort buffers ever touch the device
+            self.store = as_population_store(data)
+            self.examples = self.counts = None
+            synth_np = np.asarray(self.store.synthetic, bool)
+            self.emax = self.store.emax
+            self.row_len = self.store.row_len
+        self.synthetic = jnp.asarray(synth_np)
+        self.n_users = int(synth_np.shape[0])
         self.cohort = min(dp.clients_per_round, self.n_users)
         self.q = self.cohort / self.n_users
         if self.sampling == "poisson":
@@ -354,7 +461,7 @@ class SimEngine:
         # legacy materializing path, kept for benchmarking/validation)
         self.cohort_chunk = resolve_chunk(cohort_chunk,
                                           self.padded // self.n_blocks)
-        n_synth = int(np.asarray(data["synthetic"]).sum())
+        n_synth = int(synth_np.sum())
         expected_avail = availability * (self.n_users - n_synth) + n_synth
         if self.sampling == "fixed" and expected_avail < self.cohort:
             import warnings
@@ -379,10 +486,29 @@ class SimEngine:
         self.weight_fn = weight_fn or (
             lambda last, synth, r: pace_steering_weights(
                 last, synth, r, pace_cooldown, pace_penalty))
+        # batch-source dispatch: how a (cohort-sharded) tuple of per-slot
+        # arrays becomes the (C, nb, B, S) client batch stack — by-user-id
+        # gathers from the device corpus, or by-slot gathers from a staged
+        # cohort buffer (see _batch_args for the matching tuple layout)
+        if self.population_backend == "device":
+            self._gather_batches = lambda a: gather_client_batches(
+                self.examples, self.counts, a[0], a[1],
+                self.n_local_batches, self.client.batch_size)
+        else:
+            self._gather_batches = lambda a: gather_cohort_batches(
+                a[0], a[1], a[2], self.n_local_batches,
+                self.client.batch_size)
         self._compiled: Dict[int, Callable] = {}
-        # reference path keeps its inputs alive (no donation) so tests can
-        # replay the same initial state through both entry points
-        self._one_round = jax.jit(self._round_body)
+        # streamed backend: (sample_jit, compute_jit) per donation policy,
+        # plus the two ping-ponged staged-cohort device buffer slots
+        self._streamed_jits: Dict[bool, Tuple[Callable, Callable]] = {}
+        self._cohort_sharding = (NamedSharding(self.mesh, self._cohort_pspec)
+                                 if self.mesh is not None else None)
+        self._inflight = [None, None]
+        if self.population_backend == "device":
+            # reference path keeps its inputs alive (no donation) so tests
+            # can replay the same initial state through both entry points
+            self._one_round = jax.jit(self._round_body)
 
     # ------------------------------------------------------------------ state
 
@@ -403,20 +529,27 @@ class SimEngine:
 
     # ------------------------------------------------------------- round body
 
-    def _local_block_sums(self, params, ids, keys, slot_mask, n_blocks: int):
+    def _local_block_sums(self, params, batch_args, slot_mask,
+                          n_blocks: int):
         """Per-shard slice of the round: gather → local SGD → clip → masked
         canonical block partial sums. Returns (update-block pytree with a
         leading (n_blocks,) axis, (n_blocks, 4) stat blocks packing
         [Σ norms, Σ clipped-flags, Σ losses, Σ mask]). Streams
         ``cohort_chunk`` clients at a time unless ``cohort_chunk == 0``
-        (the legacy materializing path)."""
+        (the legacy materializing path).
+
+        ``batch_args`` is the backend's per-slot batch-source tuple (every
+        leaf carries a leading cohort-slot axis): ``(ids, keys)`` for the
+        device-resident corpus, ``(cohort_examples, cohort_counts, keys)``
+        for a staged cohort buffer — `_gather_batches` turns either into
+        the (C, nb, B, S) client batch stack."""
         if self.cohort_chunk == 0:
-            return self._materialized_block_sums(params, ids, keys,
+            return self._materialized_block_sums(params, batch_args,
                                                  slot_mask, n_blocks)
-        return self._streamed_block_sums(params, ids, keys, slot_mask,
+        return self._streamed_block_sums(params, batch_args, slot_mask,
                                          n_blocks)
 
-    def _streamed_block_sums(self, params, ids, keys, slot_mask,
+    def _streamed_block_sums(self, params, batch_args, slot_mask,
                              n_blocks: int):
         """Streaming accumulation: a scan over contiguous ``cohort_chunk``
         slices of each canonical block runs gather → local SGD per chunk and
@@ -426,33 +559,27 @@ class SimEngine:
         compute, and the per-slot fold keeps the canonical intra-block
         association so every dividing chunk size is bit-identical."""
         chunk = self.cohort_chunk
-        cpb = ids.shape[0] // (n_blocks * chunk)     # chunks per block
+        cpb = slot_mask.shape[0] // (n_blocks * chunk)   # chunks per block
         shape3 = (n_blocks, cpb, chunk)
-        ids_r = ids.reshape(shape3)
-        keys_r = keys.reshape(shape3 + keys.shape[1:])
+        args_r = jax.tree_util.tree_map(
+            lambda l: l.reshape(shape3 + l.shape[1:]), batch_args)
         mask_r = slot_mask.astype(jnp.float32).reshape(shape3)
 
         def compute_chunk(inputs):
-            c_ids, c_keys = inputs
-            batches = gather_client_batches(self.examples, self.counts,
-                                            c_ids, c_keys,
-                                            self.n_local_batches,
-                                            self.client.batch_size)
+            batches = self._gather_batches(inputs)
             return local_deltas(self.model, params, batches, self.client)
 
-        return stream_block_sums(compute_chunk, (ids_r, keys_r), mask_r,
+        return stream_block_sums(compute_chunk, args_r, mask_r,
                                  params, self.dp.clip_norm,
                                  clip_path=self.clip_path)
 
-    def _materialized_block_sums(self, params, ids, keys, slot_mask,
+    def _materialized_block_sums(self, params, batch_args, slot_mask,
                                  n_blocks: int):
         """Legacy materializing path (``cohort_chunk=0``): vmap the whole
         padded slice, stack every clipped update, block-reduce once —
         O(cohort·|params|) peak memory, XLA-reduction association. Kept as
         the validated reference and the benchmark baseline."""
-        batches = gather_client_batches(self.examples, self.counts, ids,
-                                        keys, self.n_local_batches,
-                                        self.client.batch_size)
+        batches = self._gather_batches(batch_args)
         clipped, norms, flags, losses = client_updates(
             self.model, params, batches, self.client, self.dp)
         m = slot_mask.astype(jnp.float32)
@@ -466,6 +593,11 @@ class SimEngine:
         return tree, scal
 
     def _cohort_sums(self, params, ids, keys, slot_mask):
+        """Device-backend entry: batch args are (ids, keys) gathers from the
+        device-resident corpus tensor. See :meth:`_cohort_sums_from`."""
+        return self._cohort_sums_from(params, (ids, keys), slot_mask)
+
+    def _cohort_sums_from(self, params, batch_args, slot_mask):
         """Global masked clipped sum + stat sums over the padded cohort
         buffer — per-shard compute under ``shard_map``, combined by the
         canonical block tree so every (pod, shard) topology whose total
@@ -474,10 +606,11 @@ class SimEngine:
         own contiguous block group over the intra-pod ``data`` axis, and
         only those pod partials cross the inter-pod ``pod`` axis (where the
         same pairwise tree combines them — `reduction.fold_pods`
-        association)."""
+        association). ``batch_args`` leaves shard along their leading
+        cohort-slot axis (same spec as ``slot_mask``)."""
         if self.total_shards == 1:
-            tree, scal = self._local_block_sums(params, ids, keys, slot_mask,
-                                                self.n_blocks)
+            tree, scal = self._local_block_sums(params, batch_args,
+                                                slot_mask, self.n_blocks)
             return (jax.tree_util.tree_map(_fold_blocks, tree),
                     _fold_blocks(scal))
 
@@ -487,9 +620,9 @@ class SimEngine:
         nblk_local = self.n_blocks // self.total_shards
         nblk_pod = self.n_blocks // self.num_pods
 
-        def body(params, ids, keys, slot_mask):
-            tree, scal = self._local_block_sums(params, ids, keys, slot_mask,
-                                                nblk_local)
+        def body(params, batch_args, slot_mask):
+            tree, scal = self._local_block_sums(params, batch_args,
+                                                slot_mask, nblk_local)
             # all_gather carries the raw block partials (no arithmetic), so
             # the pairwise tree below is evaluated identically — and with
             # the identical association — on every shard. The cohort layout
@@ -512,10 +645,12 @@ class SimEngine:
                 lambda l: _fold_blocks(gather_p(l)), pod_tree)
             return tree, _fold_blocks(gather_p(pod_scal))
 
+        # cspec is a pytree *prefix*: it shards every batch_args leaf along
+        # its leading cohort-slot axis, whatever the backend's tuple layout
         sharded = shard_map(
             body, mesh=self.mesh,
-            in_specs=(P(), cspec, cspec, cspec), out_specs=P())
-        return sharded(params, ids, keys, slot_mask)
+            in_specs=(P(), cspec, cspec), out_specs=P())
+        return sharded(params, batch_args, slot_mask)
 
     def _round_body(self, state: EngineState, _=None
                     ) -> Tuple[EngineState, Dict[str, jax.Array]]:
@@ -578,6 +713,143 @@ class SimEngine:
             self._compiled[k] = jax.jit(run, donate_argnums=0)
         return self._compiled[k]
 
+    # ------------------------------------------- streamed population backend
+
+    def _sample_body(self, sstate: _SamplerState):
+        """Round-k cohort selection + population-vector updates — the exact
+        sampling prefix of :meth:`_round_body` (identical PRNG splits, so the
+        streamed backend samples bit-identical cohorts), owning only the
+        O(N)-vector state. Returns the advanced sampler state plus
+        everything the host needs to stage the cohort: ``(ids, slot_mask,
+        per-slot keys, k_noise, this round's index)``."""
+        key, k_avail, k_sample, k_idx, k_noise = jax.random.split(sstate.key,
+                                                                  5)
+        avail = (jax.random.uniform(k_avail, (self.n_users,))
+                 < self.availability) | self.synthetic
+        if self.sampling == "poisson":
+            ids, slot_mask, took = poisson_select(k_sample, self.q, avail,
+                                                  self.padded)
+            last_round = jnp.where(took, sstate.round_idx, sstate.last_round)
+            participation = sstate.participation + took.astype(jnp.int32)
+        else:
+            w = self.weight_fn(sstate.last_round, self.synthetic,
+                               sstate.round_idx)
+            cohort_ids = sample_cohort(k_sample, w, avail, self.cohort)
+            ids = jnp.pad(cohort_ids, (0, self.padded - self.cohort))
+            slot_mask = jnp.arange(self.padded) < self.cohort
+            last_round = sstate.last_round.at[ids].max(
+                jnp.where(slot_mask, sstate.round_idx,
+                          jnp.int32(-(10 ** 9))))
+            participation = sstate.participation.at[ids].add(
+                slot_mask.astype(jnp.int32))
+        keys = jax.random.split(k_idx, self.padded)
+        new = _SamplerState(key, last_round, participation,
+                            sstate.round_idx + 1)
+        return new, (ids, slot_mask, keys, k_noise, sstate.round_idx)
+
+    def _compute_body(self, params, opt_state, round_idx, cohort_examples,
+                      cohort_counts, slot_mask, keys, k_noise):
+        """Round-k compute over a staged cohort buffer — the exact
+        clip→sum→noise→server-step suffix of :meth:`_round_body`, reading
+        example rows by *slot* from the (padded, E_max, seq_len+1) buffer
+        instead of by user id from the device corpus. Donated (params,
+        opt_state) keep the compile-once, update-in-place behavior of the
+        scan path."""
+        n_clients = jnp.sum(slot_mask).astype(jnp.int32)
+        total, scal = self._cohort_sums_from(
+            params, (cohort_examples, cohort_counts, keys), slot_mask)
+        denom = jnp.maximum(scal[3], 1.0)
+        mean_norm, frac_clipped, loss = (scal[0] / denom, scal[1] / denom,
+                                         scal[2] / denom)
+        delta, stats = finalize_round(total, self.cohort, k_noise, self.dp,
+                                      stats=(mean_norm, frac_clipped))
+        params, opt_state = server_step(params, opt_state, delta, self.dp)
+        rec = {"loss": loss, "mean_update_norm": mean_norm,
+               "frac_clipped": frac_clipped, "noise_std": stats.noise_std,
+               "n_clients": n_clients}
+        if self.eval_fn is not None:
+            do = ((round_idx + 1) % self.eval_every) == 0
+            out_shapes = jax.eval_shape(self.eval_fn, params, round_idx)
+            zeros = jax.tree_util.tree_map(
+                lambda s: jnp.zeros(s.shape, s.dtype), out_shapes)
+            rec["eval"] = jax.lax.cond(
+                do, lambda p: self.eval_fn(p, round_idx),
+                lambda p: zeros, params)
+            rec["eval_mask"] = do
+        return params, opt_state, rec
+
+    def _streamed_fns(self, donate: bool) -> Tuple[Callable, Callable]:
+        """(sample_jit, compute_jit), compiled once per donation policy:
+        ``run`` donates (in-place state updates, two live cohort buffers);
+        ``run_python`` keeps inputs alive so tests can replay states."""
+        if donate not in self._streamed_jits:
+            self._streamed_jits[donate] = (
+                jax.jit(self._sample_body,
+                        donate_argnums=(0,) if donate else ()),
+                jax.jit(self._compute_body,
+                        donate_argnums=(0, 1) if donate else ()))
+        return self._streamed_jits[donate]
+
+    def _stage_cohort(self, ids: np.ndarray, slot: int):
+        """Host-gather one cohort's example rows from the PopulationStore
+        and start their host→device transfer into buffer ``slot`` (two slots
+        ping-pong so at most two staged cohorts are ever device-live — the
+        one computing and the one prefetching)."""
+        ex = self.store.gather(ids)
+        cnt = self.store.gather_counts(ids)
+        if self._cohort_sharding is not None:
+            staged = (jax.device_put(ex, self._cohort_sharding),
+                      jax.device_put(cnt, self._cohort_sharding))
+        else:
+            staged = (jax.device_put(ex), jax.device_put(cnt))
+        self._inflight[slot] = staged   # overwriting frees round k−2's pair
+        return staged
+
+    def _run_streamed(self, state: EngineState, n_rounds: int, *,
+                      donate: bool, prefetch: bool
+                      ) -> Tuple[EngineState, Dict[str, np.ndarray]]:
+        """Host-driven round loop over the two jitted bodies. With
+        ``prefetch`` the loop runs one round ahead on the sampler chain:
+        round k+1's cohort ids are sampled, host-gathered, and device_put
+        while round k's (asynchronously dispatched) chunked compute scan is
+        still in flight — the double-buffered pipeline. Without it, rounds
+        stage-then-compute sequentially (the reference dispatch order);
+        both orders consume identical PRNG streams and are bit-identical."""
+        sample_jit, compute_jit = self._streamed_fns(donate)
+        sstate = _SamplerState(state.key, state.last_round,
+                               state.participation, state.round_idx)
+        params, opt_state = state.params, state.opt_state
+
+        def sample_and_stage(sstate, slot):
+            sstate, (ids, slot_mask, keys, k_noise, ridx) = sample_jit(sstate)
+            # the only per-round host sync: the (padded,) id vector
+            ex, cnt = self._stage_cohort(np.asarray(ids), slot)
+            return sstate, (ridx, ex, cnt, slot_mask, keys, k_noise)
+
+        recs = []
+        if prefetch:
+            sstate, staged = sample_and_stage(sstate, 0)
+            for r in range(n_rounds):
+                params, opt_state, rec = compute_jit(params, opt_state,
+                                                     *staged)
+                if r + 1 < n_rounds:
+                    # overlaps the compute dispatched just above
+                    sstate, staged = sample_and_stage(sstate, (r + 1) % 2)
+                recs.append(rec)
+        else:
+            for r in range(n_rounds):
+                sstate, staged = sample_and_stage(sstate, r % 2)
+                params, opt_state, rec = compute_jit(params, opt_state,
+                                                     *staged)
+                recs.append(rec)
+        recs = jax.device_get(recs)
+        hist = jax.tree_util.tree_map(lambda *xs: np.stack(xs), *recs)
+        self._inflight = [None, None]
+        new_state = EngineState(params, opt_state, sstate.key,
+                                sstate.last_round, sstate.participation,
+                                sstate.round_idx)
+        return new_state, hist
+
     # ------------------------------------------------------------------ entry
 
     def run(self, state: EngineState, n_rounds: int
@@ -585,9 +857,18 @@ class SimEngine:
         """Compiled path: scan ``rounds_per_call`` rounds per jit call.
         Returns (state, history pytree of arrays with a leading (n_rounds,)
         axis — scalars per round for the training metrics, the stacked
-        ``eval_fn`` output pytree under ``"eval"`` when a hook is set)."""
+        ``eval_fn`` output pytree under ``"eval"`` when a hook is set).
+
+        On the streamed population backend this is the double-buffered
+        host-driven loop instead (one round per compute call, cohort k+1
+        staging under cohort k's compute; ``rounds_per_call`` is a no-op
+        there); donation semantics are identical — the input state is
+        consumed either way."""
         if n_rounds <= 0:
             return state, {}
+        if self.population_backend == "streamed":
+            return self._run_streamed(state, n_rounds, donate=True,
+                                      prefetch=True)
         hists = []
         left = n_rounds
         while left > 0:
@@ -603,9 +884,14 @@ class SimEngine:
                    ) -> Tuple[EngineState, Dict[str, np.ndarray]]:
         """Reference path: the same round body, one jit entry per round.
         Consumes the identical PRNG stream as :meth:`run`, so cohorts,
-        batches, and noise match round for round."""
+        batches, and noise match round for round. On the streamed backend:
+        the non-donating, non-prefetching (stage-then-compute) dispatch of
+        the same two jitted bodies — bit-identical to :meth:`run`."""
         if n_rounds <= 0:
             return state, {}
+        if self.population_backend == "streamed":
+            return self._run_streamed(state, n_rounds, donate=False,
+                                      prefetch=False)
         recs = []
         for _ in range(n_rounds):
             state, rec = self._one_round(state)

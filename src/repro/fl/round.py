@@ -26,6 +26,14 @@ device mesh — trajectories are bit-identical across every topology whose
 dividing chunk sizes, see `repro.fl.engine`) and an in-scan
 ``eval_fn(params, round_idx)`` hook, whose stacked outputs land in
 ``trainer.eval_history``.
+
+Engine backends also accept ``population_backend`` / ``population_store``
+(see `repro.data.population_store`): with ``population_backend="streamed"``
+the corpus stays host-resident (in RAM or an mmap store directory) and the
+engine stages one cohort per round onto device — trajectories stay
+bit-exact against the device-resident default. A ``population_store`` may
+replace the ``dataset`` entirely (pass ``dataset=None``) for
+population-scale runs where no `FederatedDataset` is ever materialized.
 """
 from __future__ import annotations
 
@@ -41,6 +49,7 @@ from repro.core import accountant as acct
 from repro.core.dp_fedavg import finalize_round, server_step
 from repro.core.server_optim import ServerOptState, init_state
 from repro.data.federated import FederatedDataset
+from repro.data.population_store import as_population_store
 from repro.fl.client import make_round_fn
 from repro.fl.engine import SimEngine
 from repro.fl.population import PopulationSim
@@ -61,14 +70,16 @@ class TrainerState:
 class FederatedTrainer:
     """End-to-end DP-FedAvg trainer over a simulated device population."""
 
-    def __init__(self, model: Model, dataset: FederatedDataset,
+    def __init__(self, model: Model, dataset: Optional[FederatedDataset],
                  dp: DPConfig, client: ClientConfig,
                  pop: Optional[PopulationSim] = None, seed: int = 0,
                  n_local_batches: int = 4, backend: str = "host",
                  rounds_per_call: int = 8, sampling: Optional[str] = None,
                  num_shards: int = 1, num_pods: int = 1,
                  cohort_chunk: Optional[int] = None,
-                 clip_path: str = "fused", eval_fn=None,
+                 clip_path: str = "fused",
+                 population_backend: str = "device",
+                 population_store=None, eval_fn=None,
                  eval_every: int = 1):
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}, "
@@ -77,8 +88,21 @@ class FederatedTrainer:
             raise ValueError("num_shards/num_pods are engine-backend "
                              "features (the host loop stacks clients on one "
                              "host); use backend='engine'")
+        if backend == "host" and (population_backend != "device"
+                                  or population_store is not None):
+            raise ValueError("population_backend/population_store are "
+                             "engine-backend features (the host loop reads "
+                             "the FederatedDataset directly); use "
+                             "backend='engine'")
+        if dataset is None and population_store is None:
+            raise ValueError("pass a FederatedDataset, a population_store, "
+                             "or both")
+        if dataset is None and backend == "host":
+            raise ValueError("the host backend needs a FederatedDataset "
+                             "(population stores are engine-backend data)")
         self.model = model
         self.dataset = dataset
+        self.population_store = population_store
         self.dp = dp
         self.client = client
         self.n_local_batches = n_local_batches
@@ -87,18 +111,31 @@ class FederatedTrainer:
         if self.sampling not in ("fixed", "poisson"):
             raise ValueError(f"sampling must be 'fixed' or 'poisson', "
                              f"got {self.sampling!r}")
-        synth = [u.user_id for u in dataset.users if u.is_synthetic]
-        self.pop = pop or PopulationSim(len(dataset.users),
+        if population_store is not None:
+            store = as_population_store(population_store)
+            if (dataset is not None
+                    and len(dataset.users) != store.n_users):
+                raise ValueError(
+                    f"dataset has {len(dataset.users)} users but the "
+                    f"population store holds {store.n_users} — pass matching "
+                    "populations (or only one of the two)")
+            self.population_store = store
+            n_users = store.n_users
+            synth = np.nonzero(np.asarray(store.synthetic))[0].tolist()
+        else:
+            n_users = len(dataset.users)
+            synth = [u.user_id for u in dataset.users if u.is_synthetic]
+        self.pop = pop or PopulationSim(n_users,
                                         synthetic_ids=synth, seed=seed)
         self.rng = np.random.default_rng(seed)
         self.key = jax.random.PRNGKey(seed)
         self.accountant = acct.MomentsAccountant(
-            q=dp.clients_per_round / max(len(dataset.users), 1),
+            q=dp.clients_per_round / max(n_users, 1),
             noise_multiplier=dp.noise_multiplier,
             sampling="poisson" if self.sampling == "poisson" else "wor")
         params = model.init(jax.random.PRNGKey(seed + 1))
         self.state = TrainerState(params, init_state(params))
-        self.participation = np.zeros(len(dataset.users), np.int64)
+        self.participation = np.zeros(n_users, np.int64)
         # in-scan eval hook output, accumulated across engine chunks:
         # {"round": (n,), "mask": (n,) bool, "values": stacked eval pytree}
         self.eval_history: Optional[Dict] = None
@@ -127,9 +164,12 @@ class FederatedTrainer:
                     f"the dataset ({synth}), but the PopulationSim was "
                     f"built with synthetic_ids={list(self.pop.synthetic_ids)}"
                     " — make them agree (or omit synthetic_ids)")
+            data = (self.population_store if self.population_store is not None
+                    else dataset.to_device_arrays())
             self.engine = SimEngine(
-                model, dataset.to_device_arrays(), dp, client,
+                model, data, dp, client,
                 n_local_batches=n_local_batches,
+                population_backend=population_backend,
                 availability=self.pop.availability,
                 pace_cooldown=self.pop.pace_cooldown,
                 pace_penalty=self.pop.pace_penalty,

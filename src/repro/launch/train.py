@@ -14,11 +14,13 @@ import json
 from pathlib import Path
 
 import jax
+import numpy as np
 
 from repro.configs import ClientConfig, DPConfig, get_config
 from repro.core.secret_sharer import make_canaries
 from repro.data.corpus import BigramCorpus
 from repro.data.federated import FederatedDataset
+from repro.data.population_store import MmapPopulationStore
 from repro.fl.round import FederatedTrainer
 from repro.models import build
 from repro.train import checkpoint
@@ -79,6 +81,18 @@ def main():
                          "(fused) or the jnp cell (seq), plain autodiff "
                          "scan (ref), or auto = fused on TPU / seq "
                          "elsewhere (default: the config's cell_path)")
+    ap.add_argument("--population-backend", default=None,
+                    choices=["device", "streamed"],
+                    help="device = whole padded corpus resident on device "
+                         "(simulation default); streamed = corpus stays on "
+                         "the host and one cohort is staged per round with "
+                         "double-buffered prefetch (engine backend; "
+                         "bit-exact vs device)")
+    ap.add_argument("--population-store", default=None, metavar="DIR",
+                    help="path to an on-disk population store directory "
+                         "(see tools/build_corpus.py); replaces the "
+                         "synthesized FederatedDataset and implies "
+                         "--population-backend streamed unless overridden")
     ap.add_argument("--availability", type=float, default=0.3,
                     help="per-round device check-in probability; keep "
                          "availability·n_users above clients_per_round")
@@ -93,15 +107,32 @@ def main():
         cfg = cfg.with_(cell_path=args.cell_path)
     model = build(cfg)
 
-    corpus = BigramCorpus(vocab_size=cfg.vocab, seed=args.seed)
-    ds = FederatedDataset(corpus, n_users=args.n_users,
-                          seq_len=args.seq_len, sentences_per_user=30)
-    canaries = []
-    if args.inject_canaries:
-        canaries = make_canaries(jax.random.PRNGKey(42), vocab=cfg.vocab)
-        ds.inject_canaries(canaries)
-        print(f"injected {len(canaries)} canaries "
-              f"({sum(c.n_u for c in canaries)} synthetic devices)")
+    store = None
+    if args.population_store is not None:
+        if args.inject_canaries:
+            raise SystemExit("--inject-canaries builds synthetic devices "
+                             "into a FederatedDataset; bake them into the "
+                             "store instead (tools/build_corpus.py "
+                             "--inject-canaries)")
+        store = MmapPopulationStore(args.population_store)
+        ds = None
+        n_users = store.n_users
+        synth_ids = np.nonzero(np.asarray(store.synthetic))[0].tolist()
+        print(f"population store: {args.population_store} "
+              f"({n_users} users, E_max={store.emax}, "
+              f"seq_len={store.row_len - 1}, {len(synth_ids)} synthetic)")
+    else:
+        corpus = BigramCorpus(vocab_size=cfg.vocab, seed=args.seed)
+        ds = FederatedDataset(corpus, n_users=args.n_users,
+                              seq_len=args.seq_len, sentences_per_user=30)
+        canaries = []
+        if args.inject_canaries:
+            canaries = make_canaries(jax.random.PRNGKey(42), vocab=cfg.vocab)
+            ds.inject_canaries(canaries)
+            print(f"injected {len(canaries)} canaries "
+                  f"({sum(c.n_u for c in canaries)} synthetic devices)")
+        n_users = len(ds.users)
+        synth_ids = [u.user_id for u in ds.users if u.is_synthetic]
 
     dp = DPConfig(clients_per_round=args.clients_per_round,
                   noise_multiplier=args.noise_multiplier,
@@ -110,17 +141,23 @@ def main():
                   server_momentum=args.server_momentum)
     cl = ClientConfig(local_epochs=args.local_epochs,
                       batch_size=args.client_batch, lr=args.client_lr)
+    population_backend = args.population_backend or (
+        "streamed" if store is not None else "device")
+    if population_backend == "streamed" and args.backend == "host":
+        raise SystemExit("--population-backend streamed needs the engine "
+                         "backend (the host loop reads the dataset directly)")
     from repro.fl.population import PopulationSim
-    pop = PopulationSim(len(ds.users), availability=args.availability,
-                        synthetic_ids=[u.user_id for u in ds.users
-                                       if u.is_synthetic], seed=args.seed)
+    pop = PopulationSim(n_users, availability=args.availability,
+                        synthetic_ids=synth_ids, seed=args.seed)
     trainer = FederatedTrainer(model, ds, dp, cl, pop=pop, seed=args.seed,
                                n_local_batches=3, backend=args.backend,
                                rounds_per_call=args.rounds_per_call,
                                num_shards=args.num_shards,
                                num_pods=args.num_pods,
                                cohort_chunk=args.cohort_chunk,
-                               clip_path=args.clip_path)
+                               clip_path=args.clip_path,
+                               population_backend=population_backend,
+                               population_store=store)
     trainer.train(args.rounds, log_every=max(1, args.rounds // 20))
 
     eps = trainer.accountant.get_epsilon(1e-6)

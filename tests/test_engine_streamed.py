@@ -1,0 +1,259 @@
+"""Streamed population backend ↔ device-resident backend parity.
+
+`SimEngine(population_backend="streamed")` keeps the corpus on the host
+(PopulationStore) and stages one cohort per round into two ping-ponged
+device buffers, turning the K-round ``lax.scan`` into a host-driven loop
+over a jitted sample body and a jitted compute body. The headline contract:
+**trajectories are bit-exact against the device-resident backend** — the
+sample body replays `_round_body`'s exact PRNG splits (same cohorts, same
+per-slot batch keys, same noise keys), and the staged buffer satisfies
+``cohort_examples[slot] == examples[ids[slot]]``, so every downstream draw
+and gather is bit-identical. That parity must *compose* with the existing
+invariances: chunk sizes dividing the canonical block size, the
+materializing ``cohort_chunk=0`` path, every (pods, shards) topology in the
+bit-parity family, fixed and Poisson sampling, σ=0 and σ>0, and the mmap
+on-disk store.
+
+Shard/pod cases need forced devices:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m pytest -q tests/test_engine_streamed.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ClientConfig, DPConfig, get_config
+from repro.data.corpus import BigramCorpus
+from repro.data.federated import FederatedDataset
+from repro.data.population_store import (InMemoryPopulationStore,
+                                         ReplicatedPopulationStore,
+                                         write_population_store)
+from repro.fl.engine import (SimEngine, gather_client_batches,
+                             gather_cohort_batches)
+from repro.models import build
+
+VOCAB = 300
+ROUNDS = 2
+COHORT = 32          # padded 32 → block size 4 → chunk grid {1, 2, 4}
+
+needs = {s: pytest.mark.skipif(
+    len(jax.devices()) < s,
+    reason=f"needs {s} devices (XLA_FLAGS="
+           f"--xla_force_host_platform_device_count=8)") for s in (2, 4, 8)}
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("gboard-cifg-lstm").with_(vocab=VOCAB, d_model=24,
+                                               d_ff=48)
+    model = build(cfg)
+    corpus = BigramCorpus(vocab_size=VOCAB, seed=0)
+    ds = FederatedDataset(corpus, n_users=80, seq_len=16,
+                          sentences_per_user=20)
+    return cfg, model, ds
+
+
+@pytest.fixture(scope="module")
+def mmap_store(setup, tmp_path_factory):
+    _, _, ds = setup
+    store = InMemoryPopulationStore.from_dataset(ds)
+    path = write_population_store(
+        tmp_path_factory.mktemp("pop") / "store", store, shard_users=23)
+    return str(path)
+
+
+@pytest.fixture(scope="module")
+def runner(setup, mmap_store):
+    """Memoized engine runs keyed by config; the device-backend reference
+    run for a config is shared across every streamed comparison."""
+    _, model, ds = setup
+    data = ds.to_device_arrays()
+    cache = {}
+
+    def run(backend, *, noise=0.0, sampling="fixed", chunk=None,
+            num_shards=1, num_pods=1, store="memory", entry="run",
+            eval_fn=None):
+        key = (backend, noise, sampling, chunk, num_shards, num_pods,
+               store, entry, eval_fn is not None)
+        if key not in cache:
+            dp = DPConfig(clients_per_round=COHORT, noise_multiplier=noise,
+                          clip_norm=0.8, server_opt="momentum",
+                          server_lr=0.5, server_momentum=0.9,
+                          sampling=sampling)
+            cl = ClientConfig(local_epochs=1, batch_size=10, lr=0.3)
+            src = data if backend == "device" else (
+                mmap_store if store == "mmap"
+                else InMemoryPopulationStore.from_arrays(data))
+            eng = SimEngine(
+                model, src, dp, cl, n_local_batches=2,
+                availability=1.0 if sampling == "poisson" else 0.6,
+                rounds_per_call=ROUNDS, cohort_chunk=chunk,
+                num_shards=num_shards, num_pods=num_pods,
+                population_backend=backend, eval_fn=eval_fn)
+            state = eng.init_state(model.init(jax.random.PRNGKey(1)), seed=0)
+            state, hist = getattr(eng, entry)(state, ROUNDS)
+            cache[key] = (eng, state, hist)
+        return cache[key]
+
+    return run
+
+
+def _max_leaf_diff(a, b):
+    d = jax.tree_util.tree_map(
+        lambda x, y: float(jnp.max(jnp.abs(x.astype(jnp.float32)
+                                           - y.astype(jnp.float32)))), a, b)
+    return max(jax.tree_util.tree_leaves(d))
+
+
+def _assert_bitwise(run_a, run_b):
+    _, sa, ha = run_a
+    _, sb, hb = run_b
+    for k in ("loss", "mean_update_norm", "n_clients", "noise_std"):
+        np.testing.assert_array_equal(np.asarray(ha[k]), np.asarray(hb[k]))
+    np.testing.assert_array_equal(np.asarray(sa.participation),
+                                  np.asarray(sb.participation))
+    np.testing.assert_array_equal(np.asarray(sa.last_round),
+                                  np.asarray(sb.last_round))
+    np.testing.assert_array_equal(np.asarray(sa.key), np.asarray(sb.key))
+    assert _max_leaf_diff(sa.params, sb.params) == 0.0
+    assert _max_leaf_diff(sa.opt_state, sb.opt_state) == 0.0
+
+
+# ------------------------------------------------- headline backend parity
+
+def test_streamed_matches_device_zero_noise(runner):
+    _assert_bitwise(runner("device"), runner("streamed"))
+
+
+def test_streamed_matches_device_with_noise(runner):
+    # σ>0: finalize_round's gaussian uses the same k_noise stream per round
+    _assert_bitwise(runner("device", noise=0.3),
+                    runner("streamed", noise=0.3))
+
+
+def test_streamed_matches_device_poisson(runner):
+    # variable-size rounds: padded buffer, mask from poisson_select
+    _assert_bitwise(runner("device", sampling="poisson", noise=0.3),
+                    runner("streamed", sampling="poisson", noise=0.3))
+
+
+def test_streamed_mmap_store_matches_device(runner):
+    # full path through the on-disk sharded mmap format
+    _assert_bitwise(runner("device"), runner("streamed", store="mmap"))
+
+
+def test_streamed_run_python_matches_run(runner):
+    # donating prefetch loop vs non-donating stage-then-compute reference:
+    # same PRNG streams, different dispatch order
+    _assert_bitwise(runner("streamed"),
+                    runner("streamed", entry="run_python"))
+
+
+# ------------------------------------------- composition with PR-4 chunking
+
+def test_streamed_chunk1_matches_device(runner):
+    _assert_bitwise(runner("device", chunk=1), runner("streamed", chunk=1))
+
+
+def test_streamed_materialize_matches_device(runner):
+    # cohort_chunk=0: the materializing (non-streaming-accumulation) path
+    # also works from a staged cohort buffer
+    _assert_bitwise(runner("device", chunk=0), runner("streamed", chunk=0))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("chunk", [2, 4])
+def test_streamed_chunk_grid(runner, chunk):
+    _assert_bitwise(runner("device", chunk=chunk),
+                    runner("streamed", chunk=chunk))
+
+
+# --------------------------------------- composition with sharded topologies
+
+@needs[2]
+def test_streamed_sharded_matches_device(runner):
+    _assert_bitwise(runner("device", num_shards=2),
+                    runner("streamed", num_shards=2))
+
+
+@needs[4]
+def test_streamed_pods_matches_device(runner):
+    # 2-D (pod, data) mesh: the staged buffer device_puts with the cohort
+    # NamedSharding, so shard_map sees the same layout as the device gather
+    _assert_bitwise(runner("device", num_pods=2, num_shards=2),
+                    runner("streamed", num_pods=2, num_shards=2))
+
+
+@pytest.mark.slow
+@needs[8]
+def test_streamed_pods_wide(runner):
+    _assert_bitwise(runner("device", num_pods=2, num_shards=4),
+                    runner("streamed", num_pods=2, num_shards=4))
+
+
+@needs[2]
+def test_streamed_sharded_matches_unsharded_streamed(runner):
+    # the canonical-reduction invariance holds within the streamed backend
+    _assert_bitwise(runner("streamed"), runner("streamed", num_shards=2))
+
+
+# ------------------------------------------------------------ eval-fn hook
+
+def test_streamed_eval_hook_matches_device(runner):
+    def eval_fn(params, round_idx):
+        return {"l2": sum(jnp.sum(l.astype(jnp.float32) ** 2)
+                          for l in jax.tree_util.tree_leaves(params))}
+
+    dev = runner("device", eval_fn=eval_fn)
+    stm = runner("streamed", eval_fn=eval_fn)
+    _assert_bitwise(dev, stm)
+    np.testing.assert_array_equal(np.asarray(dev[2]["eval"]["l2"]),
+                                  np.asarray(stm[2]["eval"]["l2"]))
+    np.testing.assert_array_equal(np.asarray(dev[2]["eval_mask"]),
+                                  np.asarray(stm[2]["eval_mask"]))
+
+
+# ----------------------------------------------------- unit-level contracts
+
+def test_gather_cohort_batches_matches_client_batches(setup):
+    """Slot-indexed batching over a staged cohort buffer == id-indexed
+    batching over the resident corpus, given buffer[slot] = corpus[ids[slot]]
+    and the same per-slot keys."""
+    _, _, ds = setup
+    data = ds.to_device_arrays()
+    ex = jnp.asarray(data["examples"])
+    cnt = jnp.asarray(data["counts"])
+    ids = jnp.asarray([5, 0, 17, 5, 63, 41])
+    keys = jax.random.split(jax.random.PRNGKey(7), ids.shape[0])
+    by_id = gather_client_batches(ex, cnt, ids, keys, 3, 4)
+    by_slot = gather_cohort_batches(ex[ids], cnt[ids], keys, 3, 4)
+    for k in by_id:
+        np.testing.assert_array_equal(np.asarray(by_id[k]),
+                                      np.asarray(by_slot[k]))
+
+
+def test_streamed_frees_staging_buffers(runner):
+    eng, _, _ = runner("streamed")
+    assert eng._inflight == [None, None]
+    assert eng.examples is None and eng.counts is None
+
+
+@pytest.mark.slow
+def test_replicated_store_runs_at_scale(setup):
+    """A 10⁴-user replicated view trains through the streamed backend with
+    only O(cohort) example rows ever resident on device."""
+    _, model, ds = setup
+    base = InMemoryPopulationStore.from_dataset(ds)
+    store = ReplicatedPopulationStore(base, 10_000)
+    dp = DPConfig(clients_per_round=COHORT, noise_multiplier=0.3,
+                  clip_norm=0.8, server_opt="momentum", server_lr=0.5,
+                  server_momentum=0.9)
+    cl = ClientConfig(local_epochs=1, batch_size=10, lr=0.3)
+    eng = SimEngine(model, store, dp, cl, n_local_batches=2,
+                    availability=0.3, population_backend="streamed")
+    state = eng.init_state(model.init(jax.random.PRNGKey(1)), seed=0)
+    state, hist = eng.run(state, 3)
+    assert np.asarray(state.participation).shape == (10_000,)
+    assert np.all(np.isfinite(np.asarray(hist["loss"])))

@@ -1,0 +1,241 @@
+"""PopulationStore unit suite: round-trips, mmap format, edge guards.
+
+The store contract is that every implementation serves values bit-identical
+to the rows of ``FederatedDataset.to_device_arrays()`` — that is what makes
+the streamed engine backend's trajectories bit-exact (see
+tests/test_engine_streamed.py for the engine-level parity grid). This file
+covers the store layer itself plus the empty-shard / ``max_examples=0``
+dataset guards fixed alongside it.
+"""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.data.corpus import BigramCorpus
+from repro.data.federated import (FederatedDataset, sentences_to_examples)
+from repro.data.population_store import (InMemoryPopulationStore,
+                                         MmapPopulationStore,
+                                         PopulationStore,
+                                         ReplicatedPopulationStore,
+                                         STORE_META, as_population_store,
+                                         write_population_store)
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    corpus = BigramCorpus(vocab_size=300, seed=0)
+    return FederatedDataset(corpus, n_users=40, seq_len=16,
+                            sentences_per_user=20)
+
+
+@pytest.fixture(scope="module")
+def store(dataset):
+    return InMemoryPopulationStore.from_dataset(dataset)
+
+
+# ----------------------------------------------------- dataset edge guards
+
+def test_max_examples_zero_is_a_real_cap():
+    # regression: `if max_examples and ...` treated an explicit 0 as "no cap"
+    ex = sentences_to_examples([[1, 2, 3], [4, 5]], seq_len=4, max_examples=0)
+    assert ex.shape == (0, 5)
+    assert ex.dtype == np.int32
+
+
+def test_max_examples_caps_before_append():
+    ex = sentences_to_examples([[1, 2]] * 7, seq_len=4, max_examples=3)
+    assert ex.shape == (3, 5)
+
+
+def test_max_examples_negative_raises():
+    with pytest.raises(ValueError, match="max_examples"):
+        sentences_to_examples([[1, 2]], seq_len=4, max_examples=-1)
+
+
+def test_to_device_arrays_rejects_empty_shard():
+    corpus = BigramCorpus(vocab_size=300, seed=1)
+    ds = FederatedDataset(corpus, n_users=4, seq_len=16,
+                          sentences_per_user=5)
+    ds.users[2].examples = np.zeros((0, 17), np.int32)
+    with pytest.raises(ValueError, match="zero examples"):
+        ds.to_device_arrays()
+
+
+def test_user_tensor_rejects_empty_shard():
+    corpus = BigramCorpus(vocab_size=300, seed=1)
+    ds = FederatedDataset(corpus, n_users=2, seq_len=16,
+                          sentences_per_user=5)
+    ds.users[0].examples = np.zeros((0, 17), np.int32)
+    with pytest.raises(ValueError, match="zero examples"):
+        ds.user_tensor(0, 4, 2, np.random.default_rng(0))
+
+
+# ------------------------------------------------------------ in-memory
+
+def test_in_memory_round_trip(dataset, store):
+    data = dataset.to_device_arrays()
+    out = store.device_arrays()
+    for k in ("examples", "counts", "synthetic"):
+        np.testing.assert_array_equal(out[k], data[k])
+    assert store.n_users == dataset.n_users
+    assert store.row_len == dataset.seq_len + 1
+
+
+def test_gather_matches_fancy_indexing(store):
+    ids = np.array([3, 3, 0, 39, 17])  # duplicates + extremes are fine
+    np.testing.assert_array_equal(store.gather(ids), store.examples[ids])
+    np.testing.assert_array_equal(store.gather_counts(ids),
+                                  store.counts[ids])
+
+
+def test_gather_out_of_range_raises(store):
+    with pytest.raises(IndexError, match="out of range"):
+        store.gather([0, store.n_users])
+    with pytest.raises(IndexError, match="out of range"):
+        store.gather([-1])
+
+
+def test_store_rejects_empty_user():
+    ex = np.ones((3, 2, 5), np.int32)
+    counts = np.array([2, 0, 1], np.int32)
+    with pytest.raises(ValueError, match="no examples"):
+        InMemoryPopulationStore(ex, counts, np.zeros(3, bool))
+
+
+def test_store_rejects_shape_mismatch():
+    ex = np.ones((3, 2, 5), np.int32)
+    with pytest.raises(ValueError, match="must both"):
+        InMemoryPopulationStore(ex, np.ones(2, np.int32),
+                                np.zeros(3, bool))
+    with pytest.raises(ValueError, match="examples must be"):
+        InMemoryPopulationStore(ex[:, :, 0], np.ones(3, np.int32),
+                                np.zeros(3, bool))
+
+
+# ------------------------------------------------------------ mmap format
+
+def test_mmap_round_trip(store, tmp_path):
+    # shard size deliberately not dividing n_users: last shard is ragged
+    path = write_population_store(tmp_path / "pop", store, shard_users=17)
+    back = MmapPopulationStore(path)
+    assert (back.n_users, back.emax, back.row_len) == (
+        store.n_users, store.emax, store.row_len)
+    assert back.n_shards == -(-store.n_users // 17)
+    np.testing.assert_array_equal(back.counts, store.counts)
+    np.testing.assert_array_equal(back.synthetic, store.synthetic)
+    # cross-shard gather in arbitrary order with duplicates
+    ids = np.array([39, 0, 17, 17, 22, 5])
+    np.testing.assert_array_equal(back.gather(ids), store.gather(ids))
+    np.testing.assert_array_equal(back.device_arrays()["examples"],
+                                  store.device_arrays()["examples"])
+
+
+def test_mmap_shards_open_lazily(store, tmp_path):
+    path = write_population_store(tmp_path / "pop", store, shard_users=10)
+    back = MmapPopulationStore(path)
+    assert back._shards == {}
+    back.gather([0, 35])               # touches shards 0 and 3 only
+    assert sorted(back._shards) == [0, 3]
+    assert isinstance(back._shard(0), np.memmap)
+
+
+def test_mmap_meta_validation(store, tmp_path):
+    with pytest.raises(FileNotFoundError, match=STORE_META):
+        MmapPopulationStore(tmp_path / "nowhere")
+    path = write_population_store(tmp_path / "pop", store, shard_users=10)
+    meta = json.loads((path / STORE_META).read_text())
+    meta["version"] = 99
+    (path / STORE_META).write_text(json.dumps(meta))
+    with pytest.raises(ValueError, match="version"):
+        MmapPopulationStore(path)
+    meta["version"] = 1
+    meta["n_shards"] = 2
+    (path / STORE_META).write_text(json.dumps(meta))
+    with pytest.raises(ValueError, match="corrupt"):
+        MmapPopulationStore(path)
+
+
+def test_write_store_rejects_bad_shard_users(store, tmp_path):
+    with pytest.raises(ValueError, match="shard_users"):
+        write_population_store(tmp_path / "pop", store, shard_users=0)
+
+
+# ------------------------------------------------------------ replicated
+
+def test_replicated_view(store):
+    rep = ReplicatedPopulationStore(store, 130)
+    assert rep.n_users == 130
+    assert rep.counts.shape == (130,)
+    ids = np.array([0, 40, 80, 129, 41])
+    np.testing.assert_array_equal(rep.gather(ids),
+                                  store.gather(ids % store.n_users))
+    np.testing.assert_array_equal(rep.gather_counts(ids),
+                                  store.counts[ids % store.n_users])
+    with pytest.raises(IndexError):
+        rep.gather([130])
+    with pytest.raises(ValueError, match="n_users"):
+        ReplicatedPopulationStore(store, store.n_users - 1)
+
+
+# ------------------------------------------------------------ normalization
+
+def test_as_population_store(store, dataset, tmp_path):
+    assert as_population_store(store) is store
+    wrapped = as_population_store(dataset.to_device_arrays())
+    assert isinstance(wrapped, InMemoryPopulationStore)
+    path = write_population_store(tmp_path / "pop", store, shard_users=10)
+    opened = as_population_store(str(path))
+    assert isinstance(opened, MmapPopulationStore)
+    assert opened.n_users == store.n_users
+    with pytest.raises(TypeError, match="PopulationStore"):
+        as_population_store(42)
+
+
+def test_base_class_gather_abstract(store):
+    with pytest.raises(NotImplementedError):
+        PopulationStore.gather(store, [0])
+
+
+# ------------------------------------------------------------ converter CLI
+
+@pytest.mark.slow
+def test_build_corpus_cli_round_trip(tmp_path):
+    """tools/build_corpus.py writes a store bit-identical to the equivalent
+    FederatedDataset (same generator, same seeds)."""
+    out = tmp_path / "pop_cli"
+    r = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "build_corpus.py"),
+         "--out", str(out), "--n-users", "30", "--vocab", "300",
+         "--seq-len", "16", "--sentences-per-user", "20",
+         "--shard-users", "13"],
+        capture_output=True, text=True)
+    assert r.returncode == 0, r.stderr
+    back = MmapPopulationStore(out)
+    corpus = BigramCorpus(vocab_size=300, seed=0)
+    ds = FederatedDataset(corpus, n_users=30, seq_len=16,
+                          sentences_per_user=20)
+    data = ds.to_device_arrays()
+    np.testing.assert_array_equal(back.device_arrays()["examples"],
+                                  data["examples"])
+    np.testing.assert_array_equal(back.counts, data["counts"])
+
+
+@pytest.mark.slow
+def test_build_corpus_cli_replicate(tmp_path):
+    out = tmp_path / "pop_rep"
+    r = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "build_corpus.py"),
+         "--out", str(out), "--n-users", "20", "--vocab", "300",
+         "--seq-len", "16", "--sentences-per-user", "10",
+         "--replicate", "95", "--shard-users", "32"],
+        capture_output=True, text=True)
+    assert r.returncode == 0, r.stderr
+    back = MmapPopulationStore(out)
+    assert back.n_users == 95
+    np.testing.assert_array_equal(back.gather([0])[0], back.gather([20])[0])

@@ -1,0 +1,147 @@
+#!/usr/bin/env python
+"""Build an on-disk population store for the streamed engine backend.
+
+    PYTHONPATH=src python tools/build_corpus.py --out /data/pop_1m \
+        --n-users 1000000 --vocab 2000 --seq-len 16 --shard-users 4096
+
+Synthesizes a BigramCorpus-backed federated population (the same generator
+the simulation's `FederatedDataset` uses, so small stores are bit-identical
+to `to_device_arrays()` of the equivalent dataset) and serializes it to the
+sharded mmap format of `repro.data.population_store`:
+
+    out/
+      meta.json                       version, n_users, emax, row_len, ...
+      counts.npy                      (N,) int32 true example counts
+      synthetic.npy                   (N,) bool secret-sharer mask
+      examples-00000-of-00NNN.npy     (shard_users, E_max, seq_len+1) int32
+
+Users are generated and written one shard at a time, so building a 10^6-user
+store needs O(shard_users · E_max · seq_len) host memory, not O(N).
+
+`--inject-canaries` appends the paper's secret-sharing synthetic devices
+(n_u devices per canary, each holding n_e canary copies + public filler) at
+the tail of the id space and writes the canary metadata to `canaries.json`
+next to the store, since a store has no `FederatedDataset` to ask later.
+
+`--replicate N` instead tiles a small synthesized base population to N users
+via `ReplicatedPopulationStore` before writing — a fast way to build large
+*throughput* corpora (secret-sharer semantics do not survive replication).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.data.corpus import BigramCorpus  # noqa: E402
+from repro.data.federated import (USER_SENTENCES,  # noqa: E402
+                                  FederatedDataset, sentences_to_examples)
+from repro.data.population_store import (DEFAULT_SHARD_USERS,  # noqa: E402
+                                         InMemoryPopulationStore,
+                                         MmapPopulationStore,
+                                         PopulationStore,
+                                         ReplicatedPopulationStore,
+                                         write_population_store)
+
+
+def _dataset_store(args):
+    """Small populations: go through FederatedDataset so the store is
+    bit-identical to the simulation's in-memory path (incl. canaries).
+    Returns ``(InMemoryPopulationStore, canaries)``."""
+    corpus = BigramCorpus(vocab_size=args.vocab, seed=args.seed)
+    ds = FederatedDataset(corpus, n_users=args.n_users, seq_len=args.seq_len,
+                          sentences_per_user=args.sentences_per_user,
+                          seed=args.seed)
+    canaries = []
+    if args.inject_canaries:
+        import jax
+
+        from repro.core.secret_sharer import make_canaries
+        canaries = make_canaries(jax.random.PRNGKey(42), vocab=args.vocab)
+        ds.inject_canaries(canaries)
+    store = InMemoryPopulationStore.from_dataset(ds)
+    return store, canaries
+
+
+class _SynthesizedStore(PopulationStore):
+    """Lazy per-shard synthesis for large --n-users: generates each user's
+    sentences on first gather instead of holding the whole population.
+    Deterministic in (seed, uid) — the same per-user seeds FederatedDataset
+    uses — so a store built shard-by-shard equals one built in one shot."""
+
+    def __init__(self, args):
+        self.args = args
+        self.corpus = BigramCorpus(vocab_size=args.vocab, seed=args.seed)
+        self.n_users = args.n_users
+        self.emax = min(args.sentences_per_user, USER_SENTENCES)
+        self.row_len = args.seq_len + 1
+        self.counts = np.full((self.n_users,), self.emax, np.int32)
+        self.synthetic = np.zeros((self.n_users,), bool)
+
+    def gather(self, ids) -> np.ndarray:
+        ids = self._check_ids(ids)
+        out = np.empty((ids.shape[0], self.emax, self.row_len), np.int32)
+        a = self.args
+        for i, uid in enumerate(ids):
+            sents = self.corpus.sample_sentences(
+                self.emax, seed=a.seed * 1_000_003 + int(uid))
+            ex = sentences_to_examples(sents, a.seq_len, self.emax)
+            out[i] = ex[np.resize(np.arange(ex.shape[0]), self.emax)]
+        return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", required=True, help="store directory to create")
+    ap.add_argument("--n-users", type=int, default=1000)
+    ap.add_argument("--vocab", type=int, default=2000)
+    ap.add_argument("--seq-len", type=int, default=16)
+    ap.add_argument("--sentences-per-user", type=int, default=30)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--shard-users", type=int, default=DEFAULT_SHARD_USERS)
+    ap.add_argument("--inject-canaries", action="store_true",
+                    help="append secret-sharing devices and write "
+                         "canaries.json (small populations only)")
+    ap.add_argument("--replicate", type=int, default=None, metavar="N",
+                    help="tile the synthesized base to N users before "
+                         "writing (throughput corpora; breaks secret-sharer "
+                         "semantics)")
+    ap.add_argument("--dataset-path", action="store_true",
+                    help="force the exact FederatedDataset construction "
+                         "path even for large --n-users (O(N) host memory)")
+    args = ap.parse_args()
+
+    t0 = time.time()
+    canaries = []
+    if args.inject_canaries or args.dataset_path or args.n_users <= 20_000:
+        store, canaries = _dataset_store(args)
+    else:
+        store = _SynthesizedStore(args)
+    if args.replicate is not None:
+        store = ReplicatedPopulationStore(store, args.replicate)
+
+    path = write_population_store(args.out, store,
+                                  shard_users=args.shard_users,
+                                  seq_len=args.seq_len)
+    if canaries:
+        (path / "canaries.json").write_text(json.dumps(
+            [{"prefix": list(c.prefix), "tokens": list(c.tokens),
+              "n_u": c.n_u, "n_e": c.n_e} for c in canaries], indent=1))
+
+    back = MmapPopulationStore(path)  # reopen = cheap structural validation
+    payload = back.n_users * back.emax * back.row_len * 4
+    print(f"wrote {back.n_users} users ({back.n_shards} shards, "
+          f"E_max={back.emax}, seq_len={back.row_len - 1}, "
+          f"{payload / 1e6:.1f} MB payload"
+          + (f", {len(canaries)} canaries" if canaries else "")
+          + f") to {path} in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -26,6 +26,7 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 TIER1_BUDGET="${TIER1_BUDGET:-420}"
 echo "== tier-1: pytest -x -q (budget: ${TIER1_BUDGET}s) =="
+tier1_start=$SECONDS
 timeout "${TIER1_BUDGET}" python -m pytest -x -q --durations=10 || {
   code=$?
   if [[ $code -eq 124 ]]; then
@@ -34,6 +35,20 @@ timeout "${TIER1_BUDGET}" python -m pytest -x -q --durations=10 || {
   fi
   exit "$code"
 }
+tier1_s=$((SECONDS - tier1_start))
+tier1_pct=$((100 * tier1_s / TIER1_BUDGET))
+echo "tier-1 wall clock: ${tier1_s}s of ${TIER1_BUDGET}s budget (${tier1_pct}%)"
+# surface actual-vs-budget where reviewers look (the Actions job summary),
+# so creep toward the timeout is visible long before it starts failing runs
+if [[ -n "${GITHUB_STEP_SUMMARY:-}" ]]; then
+  {
+    echo "### tier-1 wall clock"
+    echo ""
+    echo "| actual | budget (TIER1_BUDGET) | used |"
+    echo "| --- | --- | --- |"
+    echo "| ${tier1_s}s | ${TIER1_BUDGET}s | ${tier1_pct}% |"
+  } >> "$GITHUB_STEP_SUMMARY"
+fi
 
 if [[ "${1:-}" == "--slow" ]]; then
   echo "== slow tier: pytest --runslow =="
@@ -60,6 +75,14 @@ grep -q "client_step/local_sgd" BENCH_ci.json || {
 # proves the 2-D (pod, data) engine path actually ran in the smoke
 grep -q "sim_engine/pods/.*pods=2" BENCH_ci.json || {
   echo "FAIL: sim_engine pods=2 record missing from BENCH_ci.json" >&2
+  exit 1
+}
+# the streamed population backend must leave a per-PR trace: a
+# backend=streamed record proves the host-resident-corpus round loop
+# (sample → host gather → device_put → compute) actually ran in the smoke
+grep -q "sim_engine/population/.*backend=streamed" BENCH_ci.json || {
+  echo "FAIL: sim_engine population backend=streamed record missing" \
+       "from BENCH_ci.json" >&2
   exit 1
 }
 echo "BENCH_ci.json records:"
