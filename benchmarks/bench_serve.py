@@ -1,0 +1,166 @@
+"""Closed-loop serving traffic benchmark for the continuous-batching
+engine (`repro.serve.ServeEngine`).
+
+A closed-loop driver keeps a fixed number of sessions in flight against
+the paper's production NWP model (1.3M-param CIFG-LSTM): each completed
+suggestion-strip session is immediately replaced by a fresh one until the
+target session count drains, so the engine runs at the offered concurrency
+the whole window. Per concurrency level it reports:
+
+* **p50 / p99 session latency** (submit → final token, including queue
+  wait — the suggestion-strip user experience), emitted with p50 as the
+  record's ``us_per_call``;
+* **QPS** (completed sessions/sec) and **tokens/sec** (decode throughput);
+
+and once per run a **checkpoint hot-swap drill**: with sessions in flight,
+a perturbed checkpoint is written to disk and promoted through
+``engine.load_checkpoint`` (the full DP-round → serving promotion path);
+the drill asserts **zero dropped sessions** and records the swap pause and
+how many sessions rode across the boundary.
+
+    PYTHONPATH=src:. python benchmarks/bench_serve.py [--dry-run]
+    BENCH_JSON=BENCH_serve.json PYTHONPATH=src:. \
+        python benchmarks/bench_serve.py          # archive the sweep
+
+``--dry-run`` shrinks the model and the sweep to a seconds-long CI smoke
+(still ≥3 concurrency levels + the drill, so `tools/ci.sh` can assert the
+``serve/...`` records in ``BENCH_ci.json``).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.models import build
+from repro.serve import NwpRequest, ServeEngine
+from repro.train import checkpoint
+
+PROMPT_LEN = 4
+TOP_K = 3
+
+
+def _setup(dry_run: bool):
+    cfg = get_config("gboard-cifg-lstm")
+    if dry_run:
+        cfg = cfg.with_(vocab=300, d_model=32, d_ff=64)
+    model = build(cfg)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def _submit_fresh(engine, rng, vocab, steps, temperature, uid):
+    prompt = (2,) + tuple(int(t) for t in
+                          rng.integers(4, vocab, PROMPT_LEN - 1))
+    engine.submit(NwpRequest(
+        prompt=prompt, steps=steps, temperature=temperature,
+        seed=int(uid) if temperature > 0 else None,
+        session_id=f"bench-{uid}"))
+
+
+def closed_loop(model, params, *, concurrency: int, total: int, steps: int,
+                temperature: float = 0.7, seed: int = 0):
+    """Drive ``total`` sessions at a steady ``concurrency``; returns the
+    latency/throughput stats of the steady-state window (a full
+    ``concurrency`` worth of warm-up sessions runs first so compile time
+    never lands in a timed session)."""
+    engine = ServeEngine(model, params, max_slots=concurrency, top_k=TOP_K)
+    rng = np.random.default_rng(seed)
+    vocab = model.cfg.vocab
+
+    # warm-up: compile prefill/admission/tick off the clock
+    for i in range(concurrency):
+        _submit_fresh(engine, rng, vocab, steps, temperature, 10**9 + i)
+    engine.run()
+    engine.pop_completed()
+
+    submitted = completed = tokens = 0
+    latencies = []
+    t0 = time.perf_counter()
+    while completed < total:
+        while submitted < total and engine.in_flight < concurrency:
+            _submit_fresh(engine, rng, vocab, steps, temperature, submitted)
+            submitted += 1
+        engine.step()
+        for res in engine.pop_completed():
+            assert res.status == "done"
+            latencies.append(res.latency_s)
+            tokens += len(res.tokens)
+            completed += 1
+    wall = time.perf_counter() - t0
+    lat_us = np.asarray(latencies) * 1e6
+    return {"p50_us": float(np.percentile(lat_us, 50)),
+            "p99_us": float(np.percentile(lat_us, 99)),
+            "qps": completed / wall,
+            "toks_per_s": tokens / wall,
+            "wall_s": wall,
+            "sessions": completed}
+
+
+def hot_swap_drill(model, params, *, concurrency: int, steps: int,
+                   seed: int = 7):
+    """Promote a new checkpoint with a full complement of sessions in
+    flight; returns (swap_us, stats). Asserts zero dropped sessions and
+    that every in-flight session actually crossed the version boundary."""
+    perturbed = jax.tree_util.tree_map(
+        lambda a: a * (1.0 + 1e-3) if np.issubdtype(
+            np.asarray(a).dtype, np.floating) else a, params)
+    engine = ServeEngine(model, params, max_slots=concurrency, top_k=TOP_K)
+    rng = np.random.default_rng(seed)
+    vocab = model.cfg.vocab
+    total = 2 * concurrency
+    for i in range(total):
+        _submit_fresh(engine, rng, vocab, steps, 0.7, i)
+    for _ in range(max(1, steps // 2)):
+        engine.step()
+    in_flight = engine.active_sessions
+    with tempfile.TemporaryDirectory() as tmp:
+        ck = os.path.join(tmp, "promoted.msgpack")
+        checkpoint.save(ck, perturbed, meta={"arch": model.cfg.name,
+                                             "drill": "hot_swap"})
+        t0 = time.perf_counter()
+        version = engine.load_checkpoint(ck)
+        swap_us = (time.perf_counter() - t0) * 1e6
+    results = engine.run()
+    done = [r for r in results.values() if r.status == "done"]
+    dropped = total - len(done)
+    assert dropped == 0, f"hot swap dropped {dropped} sessions"
+    crossed = sum(1 for r in done
+                  if set(r.params_versions) == {0, 1})
+    return swap_us, {"sessions": total, "dropped": dropped,
+                     "in_flight_at_swap": in_flight,
+                     "crossed_boundary": crossed, "version": version}
+
+
+def run(dry_run: bool = False):
+    model, params = _setup(dry_run)
+    sweep = [(2, 8), (4, 12), (8, 24)] if dry_run else \
+        [(8, 64), (32, 192), (128, 512)]
+    steps = 4 if dry_run else 8
+    for concurrency, total in sweep:
+        s = closed_loop(model, params, concurrency=concurrency,
+                        total=total, steps=steps)
+        emit(f"serve/latency/concurrency={concurrency}", s["p50_us"],
+             f"p99_us={s['p99_us']:.0f};qps={s['qps']:.2f};"
+             f"toks_per_s={s['toks_per_s']:.0f};steps={steps};"
+             f"sessions={s['sessions']};slots={concurrency}")
+    drill_c = 4 if dry_run else 32
+    swap_us, d = hot_swap_drill(model, params, concurrency=drill_c,
+                                steps=steps)
+    emit(f"serve/hot_swap/concurrency={drill_c}", swap_us,
+         f"sessions={d['sessions']};dropped={d['dropped']};"
+         f"in_flight_at_swap={d['in_flight_at_swap']};"
+         f"crossed_boundary={d['crossed_boundary']};steps={steps}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dry-run", action="store_true",
+                    help="tiny model + short sweep (CI smoke)")
+    args = ap.parse_args()
+    run(dry_run=args.dry_run)

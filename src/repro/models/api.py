@@ -18,3 +18,10 @@ class Model(NamedTuple):
     init_cache: Callable[..., Any]           # (batch_size, max_len) -> cache pytree
     prefill: Callable[..., Any]              # (params, batch) -> (logits, cache)
     decode_step: Callable[..., Any]          # (params, tokens (B,), cache) -> (logits (B,Vpad), cache)
+
+# Serving contract (repro/serve): a model is *continuous-batching capable*
+# when every decode-cache leaf is per-row (leading dim = batch) and
+# decode_step treats rows independently — the serving engine then admits/
+# evicts sessions by scattering their state into individual cache slots.
+# The CIFG-LSTM cache (h, c, pos — all (B, ...)) satisfies this; ring-buffer
+# KV caches with a shared scalar position do not (yet).

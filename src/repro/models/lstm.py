@@ -120,18 +120,22 @@ def loss_fn(params, batch, cfg: ModelConfig, *, remat: bool = False):
 
 
 def init_cache(cfg: ModelConfig, batch_size: int, max_len: int):
+    """Decode cache. Every leaf is *per-row* (leading dim = batch): the
+    serving engine scatters/gathers individual sessions by slot index, so
+    nothing in the cache may be shared across rows (`repro.serve.engine`
+    validates this contract)."""
     h = cfg.d_ff
     return {"h": jnp.zeros((batch_size, h), jnp.float32),
             "c": jnp.zeros((batch_size, h), jnp.float32),
-            "pos": jnp.zeros((), jnp.int32)}
+            "pos": jnp.zeros((batch_size,), jnp.int32)}
 
 
 def prefill(params, batch, cfg: ModelConfig, *, max_len: int = None):
     del max_len  # recurrent state — nothing to pad
     logits, (h, c) = forward(params, batch, cfg, collect_cache=True)
+    B, S = batch["tokens"].shape
     return logits[:, -1, :], {"h": h, "c": c,
-                              "pos": jnp.asarray(batch["tokens"].shape[1],
-                                                 jnp.int32)}
+                              "pos": jnp.full((B,), S, jnp.int32)}
 
 
 def decode_step(params, tokens, cache, cfg: ModelConfig):

@@ -1,0 +1,16 @@
+"""Serving subsystem: continuous-batching NWP decode under live traffic.
+
+* `repro.serve.engine.ServeEngine` — fixed-slot device-resident session
+  cache, continuous batching over ``model.decode_step``, top-k suggestion
+  candidates, atomic checkpoint hot-swap.
+* `repro.serve.frontend` — `NwpRequest` / `SessionResult` / the FIFO queue.
+* `repro.serve.reference` — the pure-Python single-request path the engine
+  must match token-for-token.
+* `repro.serve.sampling` — per-session keyed sampling + candidate ranking.
+"""
+from repro.serve.engine import ServeEngine, validate_cache_layout
+from repro.serve.frontend import NwpRequest, RequestQueue, SessionResult
+from repro.serve.reference import reference_generate
+
+__all__ = ["ServeEngine", "NwpRequest", "RequestQueue", "SessionResult",
+           "reference_generate", "validate_cache_layout"]

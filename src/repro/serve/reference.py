@@ -1,0 +1,85 @@
+"""Pure-Python single-request reference decode path.
+
+One session, batch width 1, an explicit Python loop: prefill the prompt,
+emit token 0 from the prefill logits, then one ``decode_step`` per token.
+This is the obviously-correct semantics the continuous-batching engine must
+reproduce **token-for-token** — same per-session key schedule
+(`repro.serve.sampling`), same candidate ranking, same hot-swap rule (a
+``swaps=[(t, params_t), ...]`` entry means tokens with index ``>= t`` are
+computed by ``params_t`` while the recurrent state carries over, exactly
+what an in-flight session experiences when a new checkpoint is promoted
+between ticks).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.api import Model
+from repro.serve import sampling
+
+# jit wrappers cached per Model instance (the bound prefill/decode_step
+# partials are stable attributes), so repeated reference calls recompile
+# nothing
+_JIT: Dict[Any, Any] = {}
+
+
+def _jitted(fn):
+    if fn not in _JIT:
+        _JIT[fn] = jax.jit(fn)
+    return _JIT[fn]
+
+
+def reference_generate(model: Model, params, prompt: Sequence[int],
+                       steps: int, *, temperature: float = 0.0,
+                       seed: Optional[int] = None, top_k: int = 3,
+                       swaps: Sequence[Tuple[int, Any]] = ()):
+    """Generate ``steps`` tokens for one session.
+
+    Returns ``(tokens, candidates)``: the emitted token ids (length
+    ``steps``) and the ranked ``(steps, top_k)`` candidate ids per
+    position. ``swaps`` promotes checkpoints mid-session: ``(t, p)`` means
+    params ``p`` computes every token with index ``>= t`` (a swap at
+    ``t = 0`` covers the prefill too — the session was admitted after the
+    promotion).
+    """
+    if steps < 0:
+        raise ValueError(f"steps must be >= 0, got {steps}")
+    if temperature > 0.0 and seed is None:
+        raise ValueError("temperature>0 sampling needs a session seed")
+    vocab = model.cfg.vocab
+    swaps = sorted(swaps, key=lambda sw: sw[0])
+
+    def params_at(t):
+        cur = params
+        for at, p in swaps:
+            if t >= at:
+                cur = p
+        return cur
+
+    if steps == 0:
+        return (), np.zeros((0, top_k), np.int32)
+
+    key = (jnp.asarray(jax.random.PRNGKey(seed)) if seed is not None
+           else jnp.zeros((2,), jnp.uint32))
+    temp = jnp.full((1,), temperature, jnp.float32)
+    prefill_j = _jitted(model.prefill)
+    decode_j = _jitted(model.decode_step)
+    sample_j = _jitted(sampling.sample_tokens)
+
+    last, cache = prefill_j(
+        params_at(0), {"tokens": jnp.asarray(prompt, jnp.int32)[None, :]})
+    tokens: List[int] = []
+    cands: List[np.ndarray] = []
+    cur = None
+    for t in range(steps):
+        if t > 0:
+            last, cache = decode_j(params_at(t), cur, cache)
+        lg = last[:, :vocab]
+        cur = sample_j(lg, key[None], jnp.full((1,), t, jnp.int32), temp)
+        tokens.append(int(cur[0]))
+        cands.append(np.asarray(sampling.topk_ids(lg, top_k)[0], np.int32))
+    return tuple(tokens), np.stack(cands)

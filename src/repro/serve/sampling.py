@@ -1,0 +1,39 @@
+"""Per-session sampling + suggestion-strip candidate primitives.
+
+The batched engine and the single-request reference path both sample
+through these functions, so parity is a property of the *inputs* (logits,
+session key, step index, temperature) — not of who calls them.
+
+The key schedule is the per-session fix for the correlated-sampling bug in
+the old batch driver (every row at step *t* shared ``fold_in(key, t)``):
+here token *t* of a session draws from ``fold_in(session_key, t)`` where
+``session_key`` is that session's own key, so concurrent sessions are
+independent and a session's stream is reproducible wherever it runs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_tokens(logits, keys, ts, temperatures):
+    """Pick one token per row. logits (B, V) f32; keys (B, 2) uint32 —
+    per-row session keys; ts (B,) int32 — per-row step index folded into
+    the key; temperatures (B,) f32 — rows with ``temp <= 0`` take the
+    greedy argmax, the rest sample ``categorical(logits / temp)``."""
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def one(key, t, row, temp):
+        kt = jax.random.fold_in(key, t)
+        return jax.random.categorical(kt, row / temp).astype(jnp.int32)
+
+    safe_t = jnp.where(temperatures > 0.0, temperatures, 1.0)
+    sampled = jax.vmap(one)(keys, ts, logits, safe_t)
+    return jnp.where(temperatures > 0.0, sampled, greedy)
+
+
+def topk_ids(logits, k: int):
+    """Ranked suggestion-strip candidates: (B, V) → (B, k) int32, best
+    first (``lax.top_k`` breaks ties toward the lower index, matching
+    ``argmax`` — candidate 0 is always the greedy token)."""
+    return jax.lax.top_k(logits, k)[1].astype(jnp.int32)

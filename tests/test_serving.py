@@ -1,6 +1,8 @@
-"""Serving path: checkpoint roundtrip, batched generation, ring-buffer
-positional invariants (checked on a fixed position/window grid covering the
-empty / partial / exactly-full / wrapped buffer regimes)."""
+"""Serving path: checkpoint roundtrip, batched generation (incl. the
+``steps=0`` / ``key=None`` / correlated-row-sampling regressions),
+ring-buffer positional invariants (checked on a fixed position/window grid
+covering the empty / partial / exactly-full / wrapped buffer regimes).
+The continuous-batching engine has its own suite in test_serve_engine.py."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -64,6 +66,53 @@ def test_generate_dense_with_cache():
         logits = model.forward(params, {"tokens": jnp.asarray([seq])})
         seq.append(int(jnp.argmax(logits[0, -1, :cfg.vocab])))
     np.testing.assert_array_equal(out, np.asarray(seq))
+
+
+# ------------------------- generate() decode-path regressions --------------
+
+
+@pytest.mark.parametrize("steps", [0, 1, 3])
+def test_generate_shape_for_all_steps(lstm_model, steps):
+    """out.shape == (B, S0+steps) for every steps >= 0; steps=0 returns
+    exactly the prompt (the old path emitted a bonus token from the
+    prefill logits)."""
+    cfg, model, params = lstm_model
+    prompts = jnp.asarray([[2, 5, 9], [2, 7, 11]], jnp.int32)
+    out = generate(model, params, prompts, steps=steps)
+    assert out.shape == (2, 3 + steps)
+    np.testing.assert_array_equal(np.asarray(out[:, :3]),
+                                  np.asarray(prompts))
+
+
+def test_generate_temperature_without_key_raises(lstm_model):
+    """The old path crashed inside fold_in(None, t); now it's a clear
+    entry-time error."""
+    cfg, model, params = lstm_model
+    prompts = jnp.asarray([[2, 5, 9]], jnp.int32)
+    with pytest.raises(ValueError, match="PRNG key"):
+        generate(model, params, prompts, steps=3, temperature=0.8)
+
+
+def test_generate_negative_steps_raises(lstm_model):
+    cfg, model, params = lstm_model
+    with pytest.raises(ValueError, match="steps"):
+        generate(model, params, jnp.asarray([[2, 5]], jnp.int32), steps=-1)
+
+
+def test_generate_rows_sample_independently(lstm_model):
+    """Identical prompts in one batch must draw from independent per-row
+    streams (the old path folded only the step index into one shared key,
+    so every row sampled the same token), deterministically given the
+    key."""
+    cfg, model, params = lstm_model
+    prompts = jnp.asarray([[2, 5, 9]] * 2, jnp.int32)
+    key = jax.random.PRNGKey(3)
+    out1 = np.asarray(generate(model, params, prompts, steps=8,
+                               temperature=0.9, key=key))
+    out2 = np.asarray(generate(model, params, prompts, steps=8,
+                               temperature=0.9, key=key))
+    np.testing.assert_array_equal(out1, out2)   # deterministic given key
+    assert not np.array_equal(out1[0], out1[1])  # rows independent
 
 
 # ----------------------------- ring buffer properties ----------------------

@@ -85,6 +85,22 @@ grep -q "sim_engine/population/.*backend=streamed" BENCH_ci.json || {
        "from BENCH_ci.json" >&2
   exit 1
 }
+
+echo "== smoke: continuous-batching serving benchmark (dry run) =="
+BENCH_JSON=BENCH_ci.json PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+  python benchmarks/bench_serve.py --dry-run
+# the serving frontend must leave a per-PR trace: closed-loop latency/QPS
+# records (>=3 concurrency levels) + the checkpoint hot-swap drill with
+# zero dropped sessions
+grep -q "serve/latency/concurrency=" BENCH_ci.json || {
+  echo "FAIL: serve latency records missing from BENCH_ci.json" >&2
+  exit 1
+}
+grep -q "serve/hot_swap/.*dropped=0" BENCH_ci.json || {
+  echo "FAIL: serve hot-swap drill record (dropped=0) missing" \
+       "from BENCH_ci.json" >&2
+  exit 1
+}
 echo "BENCH_ci.json records:"
 cat BENCH_ci.json
 
