@@ -53,6 +53,14 @@ linearly. The dry run emits one streamed + one device record into
 ``BENCH_ci.json`` (asserted by `tools/ci.sh`); the nightly full sweep lands
 in ``BENCH_population.json``.
 
+``--fault-sweep`` benchmarks the *production fault protocol*
+(`SimEngine(fault_config=…)`, PR 9) across dropout rates 0 → 0.5 with
+stragglers and corrupt reports held fixed: rounds/sec under over-selection
+plus ``committed_frac`` / ``wasted_work_frac`` — the throughput and wasted
+client computation the deployed report-goal protocol trades for round
+reliability. Dry run emits one record into ``BENCH_ci.json`` (asserted by
+`tools/ci.sh`); the nightly full sweep lands in ``BENCH_faults.json``.
+
 ``--client-step`` (also emitted after every full/dry run) is the
 local-SGD *numerator* microbench: µs per jit'd client step
 (``value_and_grad`` of the model loss on one client batch) per
@@ -344,6 +352,58 @@ def population_sweep(dry_run: bool = False):
     return results
 
 
+def fault_sweep(dry_run: bool = False):
+    """--fault-sweep: rounds/sec + protocol overhead vs dropout rate under
+    the production fault model (`fl.faults.FaultConfig`, PR 9). Each record
+    runs the over-selection/report-goal protocol (stragglers + corrupt
+    reports held fixed, dropout swept) and reports ``committed_frac`` (the
+    fraction of rounds that reached the report goal and released an update)
+    and ``wasted_work_frac`` (selected client computations that never made
+    it into a committed release — the price of dropout + over-selection the
+    deployed system actually pays). The dry run emits the single
+    ``sim_engine/faults/...`` record asserted by `tools/ci.sh`; the nightly
+    full sweep lands in ``BENCH_faults.json``."""
+    from repro.fl.faults import FaultConfig
+    cohort = 8 if dry_run else 200
+    rounds = 4 if dry_run else 60
+    warmup = 2 if dry_run else 10
+    rpc = 2 if dry_run else 10
+    dropouts = [0.3] if dry_run else [0.0, 0.1, 0.3, 0.5]
+    n_users = max(10 * cohort, 80)
+    cfg, model, ds = _setup(n_users)
+    data = ds.to_device_arrays()
+    dp = DPConfig(clients_per_round=cohort, noise_multiplier=0.3,
+                  clip_norm=0.8, server_opt="momentum", server_lr=0.5,
+                  server_momentum=0.9)
+    cl = ClientConfig(local_epochs=1, batch_size=10, lr=0.3)
+    results = {}
+    for p in dropouts:
+        fc = FaultConfig(seed=0, dropout_prob=p, straggler_prob=0.2,
+                         straggler_mean_delay=2.0, round_deadline=3.0,
+                         corrupt_prob=0.02)
+        eng = SimEngine(model, data, dp, cl, n_local_batches=2,
+                        availability=0.5, rounds_per_call=rpc,
+                        fault_config=fc)
+        state = eng.init_state(model.init(jax.random.PRNGKey(1)), seed=0)
+        state, _ = eng.run(state, warmup)
+        t0 = time.perf_counter()
+        state, hist = eng.run(state, rounds)
+        jax.block_until_ready(state.params)
+        rps = rounds / (time.perf_counter() - t0)
+        committed = hist["committed"].astype(bool)
+        selected = int(hist["n_selected"].sum())
+        useful = int(hist["n_clients"][committed].sum())
+        derived = (f"rounds_per_sec={rps:.3f};"
+                   f"committed_frac={committed.mean():.3f};"
+                   f"wasted_work_frac={1 - useful / selected:.3f};"
+                   f"report_goal={eng.report_goal};"
+                   f"over_selected={eng.sel_cohort}")
+        emit(f"sim_engine/faults/cohort={cohort}/dropout={p}",
+             1e6 / rps, derived)
+        results[p] = rps
+    return results
+
+
 def run(dry_run: bool = False, shards=(1, 2, 4, 8)):
     cohorts = [8] if dry_run else [50, 200, 1000]
     host_rounds = 2 if dry_run else 5
@@ -440,6 +500,10 @@ if __name__ == "__main__":
                          "(pod, data) cohort mesh: rounds/sec per grid "
                          "point (force 16 devices on CPU for the full "
                          "grid)")
+    ap.add_argument("--fault-sweep", action="store_true",
+                    help="sweep dropout rate under the production fault "
+                         "model (over-selection + report goals): rounds/sec "
+                         "+ committed/wasted-work fractions per record")
     ap.add_argument("--client-step", action="store_true",
                     help="only the client-step microbench (µs per local-SGD "
                          "step, per cell_path)")
@@ -448,6 +512,8 @@ if __name__ == "__main__":
         client_step_bench(dry_run=args.dry_run)
     elif args.population_sweep:
         population_sweep(dry_run=args.dry_run)
+    elif args.fault_sweep:
+        fault_sweep(dry_run=args.dry_run)
     else:
         if not (args.chunk_sweep or args.pod_sweep):
             run(dry_run=args.dry_run,
@@ -458,4 +524,5 @@ if __name__ == "__main__":
             pod_sweep(dry_run=args.dry_run)
         if args.dry_run:
             population_sweep(dry_run=True)
+            fault_sweep(dry_run=True)
         client_step_bench(dry_run=args.dry_run)

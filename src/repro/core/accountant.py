@@ -113,6 +113,22 @@ class MomentsAccountant:
     def step(self, n: int = 1) -> None:
         self._rounds += n
 
+    def record_round(self, committed: bool = True) -> None:
+        """Record one round under the production fault protocol: an aborted
+        round (survivors < report goal) released *nothing* — the noised sum
+        was never applied or published — so it composes nothing and spends
+        zero budget. Only committed rounds advance the composition count."""
+        if committed:
+            self._rounds += 1
+
+    def restore_rounds(self, rounds: int) -> None:
+        """Reset the composition count from a durable run-state snapshot
+        (crash resume). The accountant is otherwise stateless: per-round RDP
+        is recomputed from (q, z) at construction."""
+        if rounds < 0:
+            raise ValueError(f"rounds must be >= 0, got {rounds}")
+        self._rounds = int(rounds)
+
     @property
     def rounds(self) -> int:
         return self._rounds

@@ -107,7 +107,8 @@ def client_updates(model: Model, params, stacked_batches,
 
 
 def chunk_accumulate(acc, deltas, losses, mask, clip_norm: float, *,
-                     clip_path: str = "fused", interpret=None):
+                     clip_path: str = "fused", interpret=None,
+                     guard_nonfinite: bool = False):
     """Fold one chunk's unclipped client deltas into the running block
     accumulator, one slot at a time.
 
@@ -117,12 +118,31 @@ def chunk_accumulate(acc, deltas, losses, mask, clip_norm: float, *,
     into the clip factor (masked slots contribute exactly ±0). The fold is a
     strict left-to-right ``lax.scan`` — the canonical intra-block
     association (`reduction.slot_fold`), so splitting a block into chunks of
-    any dividing size reproduces bit-identical partials."""
+    any dividing size reproduces bit-identical partials.
+
+    ``guard_nonfinite`` is the server-side corrupt-report rejection of the
+    production fault model (`fl.faults`): a slot whose delta (or loss)
+    carries any non-finite value is rejected *before* it can poison the
+    accumulator — its mask is zeroed, so it contributes exact ±0 to both
+    the clipped sum and the stat sums, exactly like a dropped/Poisson-
+    excluded slot, and ``stats[3]`` ends up counting only *accepted*
+    reports (the count the round's report goal is checked against)."""
     m = mask.astype(jnp.float32)
 
     def fold(carry, slot):
         upd, stats = carry
         delta, loss, mi = slot
+        if guard_nonfinite:
+            leaves = jax.tree_util.tree_leaves(delta)
+            ok = jnp.all(jnp.stack(
+                [jnp.all(jnp.isfinite(l)) for l in leaves]
+                + [jnp.isfinite(loss)])).astype(jnp.float32)
+            # zero the garbage values too: NaN·0 = NaN, so a zeroed mask
+            # alone would still poison the norm/accumulator arithmetic
+            delta = jax.tree_util.tree_map(
+                lambda l: jnp.where(jnp.isfinite(l), l, 0.0), delta)
+            loss = jnp.where(jnp.isfinite(loss), loss, 0.0)
+            mi = mi * ok
         upd, norm, flag = clip_accumulate_tree(
             upd, delta, clip_norm, scale=mi, clip_path=clip_path,
             interpret=interpret)
@@ -135,7 +155,7 @@ def chunk_accumulate(acc, deltas, losses, mask, clip_norm: float, *,
 
 def stream_block_sums(compute_chunk, chunk_inputs, chunk_masks, params_like,
                       clip_norm: float, *, clip_path: str = "fused",
-                      interpret=None):
+                      interpret=None, guard_nonfinite: bool = False):
     """Streaming chunked accumulation of one cohort slice's canonical block
     partials — the engine's and the host loop's shared round-sum core.
 
@@ -155,6 +175,10 @@ def stream_block_sums(compute_chunk, chunk_inputs, chunk_masks, params_like,
     (n_blocks, 4) stat partials)`` — the same contract the materializing
     block-sum path feeds into the pairwise `reduction.fold_blocks` tree.
     Peak live update memory: one accumulator + one (chunk, |params|) stack.
+
+    ``guard_nonfinite`` threads the corrupt-report rejection into the
+    per-slot fold (see :func:`chunk_accumulate`) — the engine enables it
+    exactly when a `fl.faults.FaultConfig` injects non-finite updates.
     """
     zero = (tree_zeros_like(params_like, jnp.float32),
             jnp.zeros((4,), jnp.float32))
@@ -183,7 +207,8 @@ def stream_block_sums(compute_chunk, chunk_inputs, chunk_masks, params_like,
         def live(a):
             deltas, losses = compute_chunk(inputs)
             return chunk_accumulate(a, deltas, losses, cmask, clip_norm,
-                                    clip_path=clip_path, interpret=interpret)
+                                    clip_path=clip_path, interpret=interpret,
+                                    guard_nonfinite=guard_nonfinite)
 
         return jax.lax.cond(jnp.any(cmask > 0), live, lambda a: a, acc), None
 

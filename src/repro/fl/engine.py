@@ -117,6 +117,37 @@ the *same* per-slot keys against the same ``counts[u]`` bounds — gathering
 corpus tensor selects bit-identical token rows, so streamed trajectories
 are **bit-exact against the device backend** across the whole
 {pods} × {shards} × {chunk} parity grid (`tests/test_engine_streamed.py`).
+
+Production fault model (``fault_config=FaultConfig(...)``)
+----------------------------------------------------------
+
+With a `fl.faults.FaultConfig` the engine runs the deployed round protocol
+instead of the perfect-fleet simulation (paper §III; 1710.06963 §B):
+
+* **over-selection** — each round samples ``ceil(target /
+  expected_survival)`` clients (fixed mode; Poisson scales q the same way)
+  so the expected survivor count is the full target cohort;
+* **per-slot fates** — a seeded stream disjoint from the training PRNG
+  chain (`fl.faults.fault_fates`) marks slots dropped / late / corrupt;
+  dropped and late slots are masked out of the round sum (exact ±0, the
+  Poisson-exclusion machinery), corrupt slots get non-finite values
+  injected into their *update* and are rejected by the server-side guard
+  (`fl.client.chunk_accumulate(guard_nonfinite=True)`) — again exact ±0;
+* **report goal / abort** — the round *commits* only if accepted survivors
+  reach ``report_goal``; otherwise the server step is skipped via
+  ``lax.cond`` (params/opt state bit-unchanged — the noise draw still
+  consumes its key so the PRNG stream is fate-independent) and the trainer
+  records no accountant step for it. σ **and** the released mean are
+  calibrated to ``report_goal``, never the realized count, preserving the
+  sensitivity bound S/report_goal whatever the fleet does.
+
+``fault_config=None`` (the default) traces literally the fault-free round
+program — fault-off trajectories are bit-identical to the engine before the
+fault model existed. Fault-on trajectories are deterministic in the fault
+seed and bit-exact across the whole {pods} × {shards} × {chunk} ×
+{device, streamed} grid, because fates are slot-level and replicated
+(`tests/test_engine_faults.py`). Faults require the streaming accumulation
+path (``cohort_chunk > 0``) — the guard lives in the per-slot fold.
 """
 from __future__ import annotations
 
@@ -136,6 +167,7 @@ from repro.data.population_store import PopulationStore, as_population_store
 from repro.data.tokenizer import PAD
 from repro.fl.client import (client_updates, local_deltas,
                              stream_block_sums)
+from repro.fl.faults import FaultConfig, fault_fates
 # The canonical-reduction primitives live in `repro.fl.reduction` (shared
 # with the host round body); re-exported here for backwards compatibility.
 from repro.fl.reduction import (CANON_BLOCKS, block_sums as _block_sums,
@@ -148,10 +180,11 @@ from repro.sharding.specs import (batch_axes, cohort_spec,
                                   sim_mesh_config)
 from repro.utils.compat import shard_map
 
-__all__ = ["CANON_BLOCKS", "EngineState", "POPULATION_BACKENDS", "SimEngine",
-           "canon_pad", "cohort_sum", "gather_client_batches",
-           "gather_cohort_batches", "n_canon_blocks",
-           "pace_steering_weights", "poisson_select", "sample_cohort"]
+__all__ = ["CANON_BLOCKS", "EngineState", "FaultConfig",
+           "POPULATION_BACKENDS", "SimEngine", "canon_pad", "cohort_sum",
+           "gather_client_batches", "gather_cohort_batches",
+           "n_canon_blocks", "pace_steering_weights", "poisson_select",
+           "sample_cohort"]
 
 POPULATION_BACKENDS = ("device", "streamed")
 
@@ -348,6 +381,7 @@ class SimEngine:
                  cohort_chunk: Optional[int] = None,
                  clip_path: str = "fused",
                  population_backend: str = "device",
+                 fault_config: Optional[FaultConfig] = None,
                  eval_fn: Optional[Callable] = None, eval_every: int = 1):
         self.model = model
         self.dp = dp
@@ -421,9 +455,31 @@ class SimEngine:
         self.n_users = int(synth_np.shape[0])
         self.cohort = min(dp.clients_per_round, self.n_users)
         self.q = self.cohort / self.n_users
+        # production fault model: over-select so the *expected* survivor
+        # count is the target cohort, and calibrate σ (and the released
+        # mean) to the report goal — never the realized survivor count.
+        # With fault_config=None every derived quantity collapses to its
+        # fault-free value, so the traced round program is unchanged.
+        self.faults = fault_config
+        if self.faults is not None:
+            self.report_goal = self.faults.resolve_report_goal(self.cohort)
+            self.sel_cohort = min(self.n_users,
+                                  self.faults.over_selection(self.cohort))
+            self.sel_q = min(1.0, self.q / self.faults.expected_survival
+                             ) if self.faults.over_select else self.q
+            self._fault_key = jax.random.PRNGKey(self.faults.seed)
+            self._round_denom = self.report_goal
+        else:
+            self.report_goal = None
+            self.sel_cohort = self.cohort
+            self.sel_q = self.q
+            self._fault_key = None
+            self._round_denom = self.cohort
         if self.sampling == "poisson":
+            exp_sel = (self.cohort if self.faults is None
+                       else self.sel_q * self.n_users)
             buf = poisson_buffer or int(np.ceil(
-                self.cohort + 4.0 * np.sqrt(self.cohort) + 4))
+                exp_sel + 4.0 * np.sqrt(exp_sel) + 4))
             # pad, never truncate: a buffer that doesn't divide the shard
             # count grows to the next canonical multiple (masked empty
             # slots) so no selected device is silently dropped
@@ -439,11 +495,12 @@ class SimEngine:
                     "drops the overflow). Raise poisson_buffer.",
                     stacklevel=2)
         else:
-            self.buffer = self.cohort
-        # the physical per-round buffer: cohort/poisson slots padded to the
-        # canonical block grid (slot_mask zeroes the padding exactly)
+            self.buffer = self.sel_cohort
+        # the physical per-round buffer: (over-)selected / poisson slots
+        # padded to the canonical block grid (slot_mask zeroes the padding
+        # exactly; sel_cohort == cohort whenever faults are off)
         self.padded = (self.buffer if self.sampling == "poisson"
-                       else canon_pad(self.cohort, self.num_shards,
+                       else canon_pad(self.sel_cohort, self.num_shards,
                                       self.num_pods))
         self.n_blocks = n_canon_blocks(self.num_shards, self.num_pods)
         if self.padded % self.total_shards or self.padded % self.n_blocks:
@@ -461,14 +518,30 @@ class SimEngine:
         # legacy materializing path, kept for benchmarking/validation)
         self.cohort_chunk = resolve_chunk(cohort_chunk,
                                           self.padded // self.n_blocks)
+        if self.faults is not None:
+            if self.cohort_chunk == 0:
+                raise ValueError(
+                    "fault_config needs the streaming accumulation path "
+                    "(cohort_chunk > 0): corrupt-report rejection lives in "
+                    "the per-slot fold's guard_nonfinite — the materializing "
+                    "cohort_chunk=0 path is the fault-free reference only")
+            max_survivors = (self.sel_cohort if self.sampling == "fixed"
+                             else self.padded)
+            if self.report_goal > max_survivors:
+                import warnings
+                warnings.warn(
+                    f"SimEngine: report_goal={self.report_goal} exceeds the "
+                    f"per-round selection ({max_survivors} slots) — every "
+                    "round will abort and the run can never make progress. "
+                    "Lower report_goal or enable over_select.", stacklevel=2)
         n_synth = int(synth_np.sum())
         expected_avail = availability * (self.n_users - n_synth) + n_synth
-        if self.sampling == "fixed" and expected_avail < self.cohort:
+        if self.sampling == "fixed" and expected_avail < self.sel_cohort:
             import warnings
             warnings.warn(
                 f"SimEngine: expected check-ins ({expected_avail:.0f} = "
                 f"{availability}·{self.n_users - n_synth} real + {n_synth} "
-                f"synthetic) < cohort ({self.cohort}); fixed-size rounds "
+                f"synthetic) < cohort ({self.sel_cohort}); fixed-size rounds "
                 "will regularly be topped up from un-checked-in devices and "
                 "σ = zS/qN assumes the full cohort. Raise availability / "
                 "population or lower clients_per_round.", stacklevel=2)
@@ -530,7 +603,7 @@ class SimEngine:
     # ------------------------------------------------------------- round body
 
     def _local_block_sums(self, params, batch_args, slot_mask,
-                          n_blocks: int):
+                          n_blocks: int, corrupt=None):
         """Per-shard slice of the round: gather → local SGD → clip → masked
         canonical block partial sums. Returns (update-block pytree with a
         leading (n_blocks,) axis, (n_blocks, 4) stat blocks packing
@@ -542,22 +615,32 @@ class SimEngine:
         leaf carries a leading cohort-slot axis): ``(ids, keys)`` for the
         device-resident corpus, ``(cohort_examples, cohort_counts, keys)``
         for a staged cohort buffer — `_gather_batches` turns either into
-        the (C, nb, B, S) client batch stack."""
+        the (C, nb, B, S) client batch stack.
+
+        ``corrupt`` (fault model only, (slots,) bool) marks slots whose
+        report arrives as non-finite garbage — injected after local SGD,
+        rejected by the fold's guard."""
         if self.cohort_chunk == 0:
             return self._materialized_block_sums(params, batch_args,
                                                  slot_mask, n_blocks)
         return self._streamed_block_sums(params, batch_args, slot_mask,
-                                         n_blocks)
+                                         n_blocks, corrupt)
 
     def _streamed_block_sums(self, params, batch_args, slot_mask,
-                             n_blocks: int):
+                             n_blocks: int, corrupt=None):
         """Streaming accumulation: a scan over contiguous ``cohort_chunk``
         slices of each canonical block runs gather → local SGD per chunk and
         folds the chunk's clipped updates into the block's running partial
         (`fl.client.stream_block_sums`) — peak update memory is
         O(cohort_chunk·|params|), fully-masked padding chunks skip their
         compute, and the per-slot fold keeps the canonical intra-block
-        association so every dividing chunk size is bit-identical."""
+        association so every dividing chunk size is bit-identical.
+
+        With ``corrupt`` the chunk compute poisons the marked slots' deltas
+        and losses with NaN (multiplicative, so clean slots are bitwise
+        untouched) and the fold runs with ``guard_nonfinite`` — the
+        end-to-end corrupt-report injection + server-side rejection of the
+        production fault model."""
         chunk = self.cohort_chunk
         cpb = slot_mask.shape[0] // (n_blocks * chunk)   # chunks per block
         shape3 = (n_blocks, cpb, chunk)
@@ -565,13 +648,36 @@ class SimEngine:
             lambda l: l.reshape(shape3 + l.shape[1:]), batch_args)
         mask_r = slot_mask.astype(jnp.float32).reshape(shape3)
 
-        def compute_chunk(inputs):
-            batches = self._gather_batches(inputs)
-            return local_deltas(self.model, params, batches, self.client)
+        if corrupt is None:
+            def compute_chunk(inputs):
+                batches = self._gather_batches(inputs)
+                return local_deltas(self.model, params, batches, self.client)
 
-        return stream_block_sums(compute_chunk, args_r, mask_r,
+            inputs, guard = args_r, False
+        else:
+            corrupt_r = corrupt.astype(jnp.float32).reshape(shape3)
+
+            def compute_chunk(inputs):
+                args, bad = inputs
+                batches = self._gather_batches(args)
+                deltas, losses = local_deltas(self.model, params, batches,
+                                              self.client)
+                # multiply by 1 (clean) or NaN (corrupt): x·1 is a bitwise
+                # identity, x·NaN wrecks every element — the guard must
+                # reject the whole report, not salvage parts of it
+                poison = jnp.where(bad > 0, jnp.float32(jnp.nan),
+                                   jnp.float32(1.0))
+                deltas = jax.tree_util.tree_map(
+                    lambda l: l * poison.reshape((-1,) + (1,) * (l.ndim - 1)),
+                    deltas)
+                return deltas, losses * poison
+
+            inputs, guard = (args_r, corrupt_r), True
+
+        return stream_block_sums(compute_chunk, inputs, mask_r,
                                  params, self.dp.clip_norm,
-                                 clip_path=self.clip_path)
+                                 clip_path=self.clip_path,
+                                 guard_nonfinite=guard)
 
     def _materialized_block_sums(self, params, batch_args, slot_mask,
                                  n_blocks: int):
@@ -592,12 +698,13 @@ class SimEngine:
                                      axis=-1), n_blocks)
         return tree, scal
 
-    def _cohort_sums(self, params, ids, keys, slot_mask):
+    def _cohort_sums(self, params, ids, keys, slot_mask, corrupt=None):
         """Device-backend entry: batch args are (ids, keys) gathers from the
         device-resident corpus tensor. See :meth:`_cohort_sums_from`."""
-        return self._cohort_sums_from(params, (ids, keys), slot_mask)
+        return self._cohort_sums_from(params, (ids, keys), slot_mask,
+                                      corrupt)
 
-    def _cohort_sums_from(self, params, batch_args, slot_mask):
+    def _cohort_sums_from(self, params, batch_args, slot_mask, corrupt=None):
         """Global masked clipped sum + stat sums over the padded cohort
         buffer — per-shard compute under ``shard_map``, combined by the
         canonical block tree so every (pod, shard) topology whose total
@@ -607,10 +714,14 @@ class SimEngine:
         only those pod partials cross the inter-pod ``pod`` axis (where the
         same pairwise tree combines them — `reduction.fold_pods`
         association). ``batch_args`` leaves shard along their leading
-        cohort-slot axis (same spec as ``slot_mask``)."""
+        cohort-slot axis (same spec as ``slot_mask``); ``corrupt`` (fault
+        model only) shards the same way — fates are slot-level, so the
+        injection/rejection lands on the same slots whatever the
+        topology."""
         if self.total_shards == 1:
             tree, scal = self._local_block_sums(params, batch_args,
-                                                slot_mask, self.n_blocks)
+                                                slot_mask, self.n_blocks,
+                                                corrupt)
             return (jax.tree_util.tree_map(_fold_blocks, tree),
                     _fold_blocks(scal))
 
@@ -620,9 +731,10 @@ class SimEngine:
         nblk_local = self.n_blocks // self.total_shards
         nblk_pod = self.n_blocks // self.num_pods
 
-        def body(params, batch_args, slot_mask):
+        def body(params, batch_args, slot_mask, corrupt=None):
             tree, scal = self._local_block_sums(params, batch_args,
-                                                slot_mask, nblk_local)
+                                                slot_mask, nblk_local,
+                                                corrupt)
             # all_gather carries the raw block partials (no arithmetic), so
             # the pairwise tree below is evaluated identically — and with
             # the identical association — on every shard. The cohort layout
@@ -646,62 +758,143 @@ class SimEngine:
             return tree, _fold_blocks(gather_p(pod_scal))
 
         # cspec is a pytree *prefix*: it shards every batch_args leaf along
-        # its leading cohort-slot axis, whatever the backend's tuple layout
+        # its leading cohort-slot axis, whatever the backend's tuple layout.
+        # The fault-free signature is kept verbatim so fault-off programs
+        # trace exactly as before.
+        if corrupt is None:
+            sharded = shard_map(
+                body, mesh=self.mesh,
+                in_specs=(P(), cspec, cspec), out_specs=P())
+            return sharded(params, batch_args, slot_mask)
         sharded = shard_map(
             body, mesh=self.mesh,
-            in_specs=(P(), cspec, cspec), out_specs=P())
-        return sharded(params, batch_args, slot_mask)
+            in_specs=(P(), cspec, cspec, cspec), out_specs=P())
+        return sharded(params, batch_args, slot_mask, corrupt)
 
-    def _round_body(self, state: EngineState, _=None
-                    ) -> Tuple[EngineState, Dict[str, jax.Array]]:
-        key, k_avail, k_sample, k_idx, k_noise = jax.random.split(state.key, 5)
+    def _sample_phase(self, key, last_round, participation, round_idx):
+        """The round's sampling prefix, shared verbatim by the device scan
+        body (:meth:`_round_body`) and the streamed sampler body
+        (:meth:`_sample_body`) — one definition is what guarantees both
+        backends consume the identical PRNG stream. Draws availability,
+        selects the (over-selected, with faults) cohort, resolves per-slot
+        fault fates, and updates the population vectors.
+
+        Returns ``(key', last_round', participation', (ids, slot_mask,
+        report_mask, corrupt, keys, k_noise))``. With ``fault_config=None``
+        the report mask *is* the slot mask and ``corrupt`` is None — the
+        traced program is the pre-fault-model round prefix. Fault semantics:
+        Pace Steering (``last_round``) reacts to *selection* — the server
+        contacted the device whatever happened next — while
+        ``participation`` counts only slots whose report actually arrived
+        (dropped/late excluded; corrupt reports did arrive, so they
+        count)."""
+        key, k_avail, k_sample, k_idx, k_noise = jax.random.split(key, 5)
         avail = (jax.random.uniform(k_avail, (self.n_users,))
                  < self.availability) | self.synthetic
         if self.sampling == "poisson":
-            ids, slot_mask, took = poisson_select(k_sample, self.q, avail,
-                                                  self.padded)
-            last_round = jnp.where(took, state.round_idx, state.last_round)
-            participation = state.participation + took.astype(jnp.int32)
+            ids, slot_mask, took = poisson_select(k_sample, self.sel_q,
+                                                  avail, self.padded)
         else:
-            w = self.weight_fn(state.last_round, self.synthetic,
-                               state.round_idx)
-            cohort_ids = sample_cohort(k_sample, w, avail, self.cohort)
-            ids = jnp.pad(cohort_ids, (0, self.padded - self.cohort))
-            slot_mask = jnp.arange(self.padded) < self.cohort
+            w = self.weight_fn(last_round, self.synthetic, round_idx)
+            cohort_ids = sample_cohort(k_sample, w, avail, self.sel_cohort)
+            ids = jnp.pad(cohort_ids, (0, self.padded - self.sel_cohort))
+            slot_mask = jnp.arange(self.padded) < self.sel_cohort
+        if self.faults is None:
+            report_mask, corrupt = slot_mask, None
+        else:
+            # slot-level fates from the dedicated fault stream: replicated,
+            # independent of the training chain, stateless in round_idx
+            fates = fault_fates(self._fault_key, round_idx, self.padded,
+                                self.faults)
+            report_mask = slot_mask & fates.reported
+            corrupt = report_mask & fates.corrupt
+        if self.sampling == "poisson":
+            last_round = jnp.where(took, round_idx, last_round)
+            if self.faults is None:
+                participation = participation + took.astype(jnp.int32)
+            else:
+                participation = participation.at[ids].add(
+                    report_mask.astype(jnp.int32))
+        else:
             # padded slots alias device 0 — scatter through the mask so they
             # never touch the population vectors
-            last_round = state.last_round.at[ids].max(
-                jnp.where(slot_mask, state.round_idx,
-                          jnp.int32(-(10 ** 9))))
-            participation = state.participation.at[ids].add(
-                slot_mask.astype(jnp.int32))
-        n_clients = jnp.sum(slot_mask).astype(jnp.int32)
+            last_round = last_round.at[ids].max(
+                jnp.where(slot_mask, round_idx, jnp.int32(-(10 ** 9))))
+            participation = participation.at[ids].add(
+                (slot_mask if self.faults is None
+                 else report_mask).astype(jnp.int32))
         keys = jax.random.split(k_idx, self.padded)
-        total, scal = self._cohort_sums(state.params, ids, keys, slot_mask)
+        return (key, last_round, participation,
+                (ids, slot_mask, report_mask, corrupt, keys, k_noise))
+
+    def _compute_phase(self, params, opt_state, round_idx, batch_args,
+                       slot_mask, report_mask, corrupt, k_noise):
+        """The round's compute suffix, shared by both backends: masked
+        clipped sum over the reporting slots → finalize (noise) → server
+        step — with the fault model, committed only if accepted survivors
+        reach the report goal, otherwise aborted via ``lax.cond`` (params
+        and opt state pass through bit-unchanged; the noise key was already
+        consumed by the replicated draw, so the PRNG stream — and therefore
+        every later round's sampling — is independent of the verdict)."""
+        n_selected = jnp.sum(slot_mask).astype(jnp.int32)
+        total, scal = self._cohort_sums_from(params, batch_args,
+                                             report_mask, corrupt)
         denom = jnp.maximum(scal[3], 1.0)
         mean_norm, frac_clipped, loss = (scal[0] / denom, scal[1] / denom,
                                          scal[2] / denom)
-        # Δ̄ and σ are calibrated against qN — the exact round size in fixed
-        # mode, the *expected* one under Poisson sampling [MRTZ17]. The
-        # noise key is the replicated stream: one draw, every shard agrees.
-        delta, stats = finalize_round(total, self.cohort, k_noise, self.dp,
+        # Δ̄ and σ are calibrated against a *fixed* denominator — qN (the
+        # exact fixed-mode round size / the expected Poisson one [MRTZ17]),
+        # or the report goal under the fault model, never the realized
+        # survivor count. The noise key is the replicated stream: one draw,
+        # every shard agrees.
+        delta, stats = finalize_round(total, self._round_denom, k_noise,
+                                      self.dp,
                                       stats=(mean_norm, frac_clipped))
-        params, opt_state = server_step(state.params, state.opt_state, delta,
-                                        self.dp)
-        new_state = EngineState(params, opt_state, key, last_round,
-                                participation, state.round_idx + 1)
-        rec = {"loss": loss, "mean_update_norm": mean_norm,
-               "frac_clipped": frac_clipped, "noise_std": stats.noise_std,
-               "n_clients": n_clients}
+        if self.faults is None:
+            params, opt_state = server_step(params, opt_state, delta,
+                                            self.dp)
+            rec = {"loss": loss, "mean_update_norm": mean_norm,
+                   "frac_clipped": frac_clipped,
+                   "noise_std": stats.noise_std, "n_clients": n_selected}
+        else:
+            # scal[3] = Σ report_mask minus guard-rejected slots: exactly
+            # the usable reports the production server counts against the
+            # report goal before deciding to commit
+            n_accepted = scal[3].astype(jnp.int32)
+            n_reported = jnp.sum(report_mask).astype(jnp.int32)
+            committed = scal[3] >= jnp.float32(self.report_goal)
+            params, opt_state = jax.lax.cond(
+                committed,
+                lambda po: server_step(po[0], po[1], delta, self.dp),
+                lambda po: po,
+                (params, opt_state))
+            rec = {"loss": loss, "mean_update_norm": mean_norm,
+                   "frac_clipped": frac_clipped,
+                   "noise_std": stats.noise_std, "n_clients": n_accepted,
+                   "n_selected": n_selected, "n_reported": n_reported,
+                   "committed": committed}
         if self.eval_fn is not None:
-            do = ((state.round_idx + 1) % self.eval_every) == 0
-            out_shapes = jax.eval_shape(self.eval_fn, params, state.round_idx)
+            do = ((round_idx + 1) % self.eval_every) == 0
+            out_shapes = jax.eval_shape(self.eval_fn, params, round_idx)
             zeros = jax.tree_util.tree_map(
                 lambda s: jnp.zeros(s.shape, s.dtype), out_shapes)
             rec["eval"] = jax.lax.cond(
-                do, lambda p: self.eval_fn(p, state.round_idx),
+                do, lambda p: self.eval_fn(p, round_idx),
                 lambda p: zeros, params)
             rec["eval_mask"] = do
+        return params, opt_state, rec
+
+    def _round_body(self, state: EngineState, _=None
+                    ) -> Tuple[EngineState, Dict[str, jax.Array]]:
+        key, last_round, participation, \
+            (ids, slot_mask, report_mask, corrupt, keys, k_noise) = \
+            self._sample_phase(state.key, state.last_round,
+                               state.participation, state.round_idx)
+        params, opt_state, rec = self._compute_phase(
+            state.params, state.opt_state, state.round_idx, (ids, keys),
+            slot_mask, report_mask, corrupt, k_noise)
+        new_state = EngineState(params, opt_state, key, last_round,
+                                participation, state.round_idx + 1)
         return new_state, rec
 
     def _run_k(self, k: int) -> Callable:
@@ -716,67 +909,34 @@ class SimEngine:
     # ------------------------------------------- streamed population backend
 
     def _sample_body(self, sstate: _SamplerState):
-        """Round-k cohort selection + population-vector updates — the exact
-        sampling prefix of :meth:`_round_body` (identical PRNG splits, so the
-        streamed backend samples bit-identical cohorts), owning only the
-        O(N)-vector state. Returns the advanced sampler state plus
-        everything the host needs to stage the cohort: ``(ids, slot_mask,
-        per-slot keys, k_noise, this round's index)``."""
-        key, k_avail, k_sample, k_idx, k_noise = jax.random.split(sstate.key,
-                                                                  5)
-        avail = (jax.random.uniform(k_avail, (self.n_users,))
-                 < self.availability) | self.synthetic
-        if self.sampling == "poisson":
-            ids, slot_mask, took = poisson_select(k_sample, self.q, avail,
-                                                  self.padded)
-            last_round = jnp.where(took, sstate.round_idx, sstate.last_round)
-            participation = sstate.participation + took.astype(jnp.int32)
-        else:
-            w = self.weight_fn(sstate.last_round, self.synthetic,
-                               sstate.round_idx)
-            cohort_ids = sample_cohort(k_sample, w, avail, self.cohort)
-            ids = jnp.pad(cohort_ids, (0, self.padded - self.cohort))
-            slot_mask = jnp.arange(self.padded) < self.cohort
-            last_round = sstate.last_round.at[ids].max(
-                jnp.where(slot_mask, sstate.round_idx,
-                          jnp.int32(-(10 ** 9))))
-            participation = sstate.participation.at[ids].add(
-                slot_mask.astype(jnp.int32))
-        keys = jax.random.split(k_idx, self.padded)
+        """Round-k cohort selection + population-vector updates — delegating
+        to the same :meth:`_sample_phase` the device scan body uses (so the
+        streamed backend samples bit-identical cohorts and fault fates),
+        owning only the O(N)-vector state. Returns the advanced sampler
+        state plus everything the host needs to stage the cohort: ``(ids,
+        slot/report/corrupt masks, per-slot keys, k_noise, this round's
+        index)``."""
+        key, last_round, participation, \
+            (ids, slot_mask, report_mask, corrupt, keys, k_noise) = \
+            self._sample_phase(sstate.key, sstate.last_round,
+                               sstate.participation, sstate.round_idx)
         new = _SamplerState(key, last_round, participation,
                             sstate.round_idx + 1)
-        return new, (ids, slot_mask, keys, k_noise, sstate.round_idx)
+        return new, (ids, slot_mask, report_mask, corrupt, keys, k_noise,
+                     sstate.round_idx)
 
     def _compute_body(self, params, opt_state, round_idx, cohort_examples,
-                      cohort_counts, slot_mask, keys, k_noise):
-        """Round-k compute over a staged cohort buffer — the exact
-        clip→sum→noise→server-step suffix of :meth:`_round_body`, reading
-        example rows by *slot* from the (padded, E_max, seq_len+1) buffer
-        instead of by user id from the device corpus. Donated (params,
-        opt_state) keep the compile-once, update-in-place behavior of the
-        scan path."""
-        n_clients = jnp.sum(slot_mask).astype(jnp.int32)
-        total, scal = self._cohort_sums_from(
-            params, (cohort_examples, cohort_counts, keys), slot_mask)
-        denom = jnp.maximum(scal[3], 1.0)
-        mean_norm, frac_clipped, loss = (scal[0] / denom, scal[1] / denom,
-                                         scal[2] / denom)
-        delta, stats = finalize_round(total, self.cohort, k_noise, self.dp,
-                                      stats=(mean_norm, frac_clipped))
-        params, opt_state = server_step(params, opt_state, delta, self.dp)
-        rec = {"loss": loss, "mean_update_norm": mean_norm,
-               "frac_clipped": frac_clipped, "noise_std": stats.noise_std,
-               "n_clients": n_clients}
-        if self.eval_fn is not None:
-            do = ((round_idx + 1) % self.eval_every) == 0
-            out_shapes = jax.eval_shape(self.eval_fn, params, round_idx)
-            zeros = jax.tree_util.tree_map(
-                lambda s: jnp.zeros(s.shape, s.dtype), out_shapes)
-            rec["eval"] = jax.lax.cond(
-                do, lambda p: self.eval_fn(p, round_idx),
-                lambda p: zeros, params)
-            rec["eval_mask"] = do
-        return params, opt_state, rec
+                      cohort_counts, slot_mask, report_mask, corrupt, keys,
+                      k_noise):
+        """Round-k compute over a staged cohort buffer — the same
+        :meth:`_compute_phase` suffix as the scan path, reading example rows
+        by *slot* from the (padded, E_max, seq_len+1) buffer instead of by
+        user id from the device corpus. Donated (params, opt_state) keep the
+        compile-once, update-in-place behavior of the scan path."""
+        return self._compute_phase(
+            params, opt_state, round_idx,
+            (cohort_examples, cohort_counts, keys), slot_mask, report_mask,
+            corrupt, k_noise)
 
     def _streamed_fns(self, donate: bool) -> Tuple[Callable, Callable]:
         """(sample_jit, compute_jit), compiled once per donation policy:
@@ -821,10 +981,12 @@ class SimEngine:
         params, opt_state = state.params, state.opt_state
 
         def sample_and_stage(sstate, slot):
-            sstate, (ids, slot_mask, keys, k_noise, ridx) = sample_jit(sstate)
+            sstate, (ids, slot_mask, report_mask, corrupt, keys,
+                     k_noise, ridx) = sample_jit(sstate)
             # the only per-round host sync: the (padded,) id vector
             ex, cnt = self._stage_cohort(np.asarray(ids), slot)
-            return sstate, (ridx, ex, cnt, slot_mask, keys, k_noise)
+            return sstate, (ridx, ex, cnt, slot_mask, report_mask, corrupt,
+                            keys, k_noise)
 
         recs = []
         if prefetch:

@@ -1,0 +1,166 @@
+"""Production round fault model: dropout, stragglers, corrupt reports,
+over-selection with report goals (paper §III; arXiv 1710.06963 §B; arXiv
+2305.18465).
+
+A deployed fleet never delivers the simulator's happy path: devices accept a
+training task and vanish (battery, network, user picks the phone up), report
+after the server has already closed the round, or deliver garbage bytes. The
+production protocol compensates by *over-selecting* — sampling
+``ceil(target / expected_survival)`` clients so the expected survivor count
+is the full target — and closing each round against a **report goal**: if
+fewer than ``report_goal`` usable reports arrive, the round *aborts* (server
+step skipped, nothing released, no privacy budget spent); if it commits, the
+noise σ is calibrated to ``report_goal`` — never the realized survivor
+count — so a lucky (or adversarially timed) round can't silently weaken the
+per-round guarantee.
+
+The model here is *seeded and stateless per round*: every slot's fate is a
+pure function of ``(fault seed, round index, slot position)``, drawn
+replicated on every shard. That single property carries three contracts:
+
+* fault-on trajectories are bit-exact across the whole
+  {pods} × {shards} × {chunk} × {device, streamed} parity grid (slot-level
+  fates never depend on where a slot is computed);
+* the fault stream is disjoint from the engine's training PRNG chain
+  (``fold_in(PRNGKey(seed), round_idx)``), so turning faults *off* leaves
+  the sampling/noise draws — and therefore the fault-free trajectory
+  family — untouched;
+* a crash-resumed run reproduces the exact fault stream with **no persisted
+  fault state**: the "position" in the stream *is* the round index.
+
+Per-slot fates:
+
+* **dropped** — accepted the task, never reports: P = ``dropout_prob``.
+* **late** — reports after the deadline: a ``straggler_prob`` fraction of
+  devices draw an Exponential(``straggler_mean_delay``) report latency; the
+  server closes the round at ``round_deadline``, so a straggler misses it
+  with P(Exp(mean) > deadline) = exp(−deadline/mean).
+* **corrupt** — the report arrives on time but the payload is non-finite
+  garbage (truncated serialization, client-side OOM mid-update). The
+  corruption is *injected into the update values* and caught by the
+  server-side guard (`fl.client.chunk_accumulate(guard_nonfinite=True)`),
+  not short-circuited — the rejection path is exercised end to end.
+
+Dropped/late/rejected slots contribute exact ±0 to the round sum through
+the same mask machinery Poisson-excluded slots use (`fl.reduction`), which
+is why the fault model composes with every existing aggregation topology.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import NamedTuple, Optional
+
+import jax
+
+__all__ = ["FaultConfig", "FaultFates", "fault_fates"]
+
+
+class FaultFates(NamedTuple):
+    """Per-slot fates for one round — all ``(n_slots,)`` bool, replicated."""
+
+    reported: jax.Array   # on time: neither dropped nor late
+    corrupt: jax.Array    # reported, but the payload is non-finite garbage
+    dropped: jax.Array    # never reports
+    late: jax.Array       # reports after the round deadline
+
+
+@dataclass(frozen=True)
+class FaultConfig:
+    """Seeded fleet fault model driving `fl.engine.SimEngine`'s
+    over-selection / report-goal round protocol.
+
+    ``report_goal=None`` derives the goal as ``ceil(goal_frac · target)``
+    from the target cohort (2305.18465 closes rounds at ~90% of the target;
+    the 0.8 default leaves abort headroom at simulation scale).
+    ``over_select=False`` disables the compensating over-sampling (rounds
+    then shrink by the fault rate — useful for forcing aborts in tests).
+    """
+
+    seed: int = 0
+    dropout_prob: float = 0.0
+    straggler_prob: float = 0.0
+    straggler_mean_delay: float = 1.0
+    round_deadline: float = 3.0
+    corrupt_prob: float = 0.0
+    report_goal: Optional[int] = None
+    goal_frac: float = 0.8
+    over_select: bool = True
+
+    def __post_init__(self):
+        for name in ("dropout_prob", "straggler_prob", "corrupt_prob"):
+            v = getattr(self, name)
+            if not 0.0 <= v < 1.0:
+                raise ValueError(
+                    f"FaultConfig.{name} must be in [0, 1), got {v!r} — a "
+                    "probability of 1 means no round can ever commit")
+        if self.straggler_mean_delay <= 0 or self.round_deadline <= 0:
+            raise ValueError(
+                "FaultConfig straggler_mean_delay and round_deadline must "
+                f"be positive, got {self.straggler_mean_delay!r} / "
+                f"{self.round_deadline!r}")
+        if not 0.0 < self.goal_frac <= 1.0:
+            raise ValueError(
+                f"FaultConfig.goal_frac must be in (0, 1], got "
+                f"{self.goal_frac!r}")
+        if self.report_goal is not None and self.report_goal < 1:
+            raise ValueError(
+                f"FaultConfig.report_goal must be >= 1, got "
+                f"{self.report_goal!r}")
+
+    @property
+    def late_prob(self) -> float:
+        """P(a slot is a straggler *and* its report misses the deadline)."""
+        return self.straggler_prob * math.exp(
+            -self.round_deadline / self.straggler_mean_delay)
+
+    @property
+    def on_time_prob(self) -> float:
+        return (1.0 - self.dropout_prob) * (1.0 - self.late_prob)
+
+    @property
+    def expected_survival(self) -> float:
+        """P(a selected slot reports on time and passes the non-finite
+        guard) — the denominator of the over-selection factor."""
+        return self.on_time_prob * (1.0 - self.corrupt_prob)
+
+    def resolve_report_goal(self, target: int) -> int:
+        """Minimum usable-report count for a round to commit. σ is always
+        calibrated to this number (`core.dp_fedavg.finalize_round` gets it
+        as the round size), never to the realized survivor count."""
+        if self.report_goal is not None:
+            return self.report_goal
+        return max(1, int(math.ceil(self.goal_frac * target)))
+
+    def over_selection(self, target: int) -> int:
+        """``ceil(target / expected_survival)`` — sample enough clients that
+        the *expected* survivor count is the full target [1710.06963 §B]."""
+        if not self.over_select:
+            return target
+        return int(math.ceil(target / self.expected_survival))
+
+
+def fault_fates(fault_key, round_idx, n_slots: int,
+                cfg: FaultConfig) -> FaultFates:
+    """Draw one round's per-slot fates (pure, traceable — ``round_idx`` may
+    be a traced scalar, which is how the fates live inside the engine's
+    ``lax.scan`` round body).
+
+    The uniforms are thresholded by the probabilities (monotone coupling):
+    for a fixed seed, raising ``dropout_prob`` strictly grows the dropped
+    set — `tests/test_accountant.py` leans on this for the ε-monotonicity
+    property. A dropped slot can't also be late (it never reports at all);
+    a corrupt flag only matters on a reported slot.
+    """
+    fkey = jax.random.fold_in(fault_key, round_idx)
+    k_drop, k_strag, k_delay, k_corrupt = jax.random.split(fkey, 4)
+    dropped = jax.random.uniform(k_drop, (n_slots,)) < cfg.dropout_prob
+    straggler = (jax.random.uniform(k_strag, (n_slots,))
+                 < cfg.straggler_prob)
+    delay = cfg.straggler_mean_delay * jax.random.exponential(
+        k_delay, (n_slots,))
+    late = straggler & (delay > cfg.round_deadline) & ~dropped
+    corrupt_draw = jax.random.uniform(k_corrupt, (n_slots,)) < cfg.corrupt_prob
+    reported = ~dropped & ~late
+    return FaultFates(reported=reported, corrupt=reported & corrupt_draw,
+                      dropped=dropped, late=late)

@@ -27,6 +27,14 @@ dividing chunk sizes, see `repro.fl.engine`) and an in-scan
 ``eval_fn(params, round_idx)`` hook, whose stacked outputs land in
 ``trainer.eval_history``.
 
+Engine backends also accept ``fault_config`` (`fl.faults.FaultConfig`):
+the production round fault model — over-selection, report goals, DP-safe
+aborts. Under it the accountant composes only *committed* rounds (an
+aborted round released nothing), round records carry
+``n_selected``/``n_reported``/``n_clients``/``committed``, and
+`save_run_state` / `restore_run_state` make long runs crash-survivable
+(resume is bit-exact, faults on or off).
+
 Engine backends also accept ``population_backend`` / ``population_store``
 (see `repro.data.population_store`): with ``population_backend="streamed"``
 the corpus stays host-resident (in RAM or an mmap store directory) and the
@@ -37,12 +45,15 @@ population-scale runs where no `FederatedDataset` is ever materialized.
 """
 from __future__ import annotations
 
+import json
 from dataclasses import dataclass, field
+from pathlib import Path
 from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ClientConfig, DPConfig
 from repro.core import accountant as acct
@@ -51,10 +62,12 @@ from repro.core.server_optim import ServerOptState, init_state
 from repro.data.federated import FederatedDataset
 from repro.data.population_store import as_population_store
 from repro.fl.client import make_round_fn
-from repro.fl.engine import SimEngine
+from repro.fl.engine import EngineState, SimEngine
+from repro.fl.faults import FaultConfig
 from repro.fl.population import PopulationSim
 from repro.fl.sampling import sample_round
 from repro.models.api import Model
+from repro.train import checkpoint
 
 BACKENDS = ("host", "engine", "engine_python")
 
@@ -79,7 +92,8 @@ class FederatedTrainer:
                  cohort_chunk: Optional[int] = None,
                  clip_path: str = "fused",
                  population_backend: str = "device",
-                 population_store=None, eval_fn=None,
+                 population_store=None,
+                 fault_config: Optional[FaultConfig] = None, eval_fn=None,
                  eval_every: int = 1):
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}, "
@@ -88,6 +102,11 @@ class FederatedTrainer:
             raise ValueError("num_shards/num_pods are engine-backend "
                              "features (the host loop stacks clients on one "
                              "host); use backend='engine'")
+        if backend == "host" and fault_config is not None:
+            raise ValueError("fault_config is an engine-backend feature "
+                             "(the over-selection/report-goal protocol lives "
+                             "in the engine round bodies); use "
+                             "backend='engine'")
         if backend == "host" and (population_backend != "device"
                                   or population_store is not None):
             raise ValueError("population_backend/population_store are "
@@ -177,6 +196,7 @@ class FederatedTrainer:
                 sampling=self.sampling, num_shards=num_shards,
                 num_pods=num_pods,
                 cohort_chunk=cohort_chunk, clip_path=clip_path,
+                fault_config=fault_config,
                 eval_fn=eval_fn, eval_every=eval_every)
             self._estate = self.engine.init_state(
                 params, seed=seed, opt_state=self.state.opt_state)
@@ -219,6 +239,7 @@ class FederatedTrainer:
                "mean_update_norm": float(mean_norm),
                "frac_clipped": float(frac_clipped),
                "n_clients": int(len(ids)),
+               "n_target": int(self.dp.clients_per_round),
                "noise_std": float(stats.noise_std)}
         s.history.append(rec)
         return rec
@@ -241,6 +262,7 @@ class FederatedTrainer:
                   else self.engine.run_python)
         recs = []
         done = 0
+        stepped = 0
         while done < rounds:
             # chunk by log_every so progress lines appear while training
             k = min(log_every or rounds, rounds - done)
@@ -249,6 +271,9 @@ class FederatedTrainer:
             if "eval" in hist:
                 self._append_eval(np.arange(start + 1, start + k + 1),
                                   hist["eval_mask"], hist["eval"])
+            faulted = "committed" in hist
+            # only committed rounds released anything, so only they compose
+            stepped += int(np.sum(hist["committed"])) if faulted else k
             for i in range(k):
                 s.round_idx += 1
                 rec = {"round": s.round_idx, "loss": float(hist["loss"][i]),
@@ -257,6 +282,10 @@ class FederatedTrainer:
                        "frac_clipped": float(hist["frac_clipped"][i]),
                        "n_clients": int(hist["n_clients"][i]),
                        "noise_std": float(hist["noise_std"][i])}
+                if faulted:
+                    rec["n_selected"] = int(hist["n_selected"][i])
+                    rec["n_reported"] = int(hist["n_reported"][i])
+                    rec["committed"] = bool(hist["committed"][i])
                 s.history.append(rec)
                 recs.append(rec)
                 if log_every and rec["round"] % log_every == 0:
@@ -264,12 +293,76 @@ class FederatedTrainer:
             done += k
         s.params = self._estate.params
         s.opt_state = self._estate.opt_state
-        self.accountant.step(rounds)
+        self.accountant.step(stepped)
         # mirror device population state back into the host PopulationSim so
         # post-hoc analyses (participation, Pace-Steering recency) see it
         self.participation = np.asarray(self._estate.participation, np.int64)
         self.pop.absorb_last_round(np.asarray(self._estate.last_round))
         return recs
+
+    # ------------------------------------------------------- crash resilience
+
+    def save_run_state(self, path) -> None:
+        """Persist the full mid-run state durably (engine backends): params,
+        server-optimizer state, the engine PRNG key (which *is* the sampler
+        chain — the streamed sampler splits from the same key), population
+        vectors, round index, accountant position, and the round history.
+        The fault stream needs no state of its own — its position is the
+        round index (`fl.faults`). Written atomically via
+        `train.checkpoint.save` (temp-then-rename), so a crash mid-save
+        never destroys the previous durable state."""
+        if self.engine is None:
+            raise ValueError("save_run_state/restore_run_state are "
+                             "engine-backend features; use backend='engine'")
+        est = jax.device_get(self._estate)
+        tree = {"estate": {"params": est.params,
+                           "opt_state": tuple(est.opt_state),
+                           "key": np.asarray(est.key),
+                           "last_round": np.asarray(est.last_round),
+                           "participation": np.asarray(est.participation),
+                           "round_idx": np.asarray(est.round_idx)}}
+        checkpoint.save(Path(path), tree, meta={
+            "kind": "trainer-run-state", "version": "1",
+            "round_idx": str(self.state.round_idx),
+            "accountant_rounds": str(self.accountant.rounds),
+            "history": json.dumps(self.state.history)})
+
+    def restore_run_state(self, path) -> int:
+        """Restore a `save_run_state` snapshot and return the round index to
+        resume from. Continuing for the remaining rounds reproduces the
+        uninterrupted trajectory bit-exactly (the PRNG key, population
+        vectors and fault-stream position — the round index — are all part
+        of the snapshot)."""
+        if self.engine is None:
+            raise ValueError("save_run_state/restore_run_state are "
+                             "engine-backend features; use backend='engine'")
+        tree, meta = checkpoint.load(Path(path))
+        if meta.get("kind") != "trainer-run-state":
+            raise checkpoint.CheckpointError(
+                f"{path} is not a trainer run-state snapshot "
+                f"(kind={meta.get('kind')!r})")
+        est = tree["estate"]
+        state = EngineState(
+            params=est["params"],
+            opt_state=ServerOptState(*est["opt_state"]),
+            key=jnp.asarray(est["key"]),
+            last_round=jnp.asarray(est["last_round"]),
+            participation=jnp.asarray(est["participation"]),
+            round_idx=jnp.asarray(est["round_idx"]))
+        if getattr(self.engine, "mesh", None) is not None:
+            state = jax.device_put(
+                state, NamedSharding(self.engine.mesh, P()))
+        else:
+            state = jax.device_put(state)
+        self._estate = state
+        self.state.params = state.params
+        self.state.opt_state = state.opt_state
+        self.state.round_idx = int(meta["round_idx"])
+        self.state.history = json.loads(meta["history"])
+        self.accountant.restore_rounds(int(meta["accountant_rounds"]))
+        self.participation = np.asarray(est["participation"], np.int64)
+        self.pop.absorb_last_round(np.asarray(est["last_round"]))
+        return self.state.round_idx
 
     # ---------------------------------------------------------------- public
 

@@ -8,6 +8,7 @@ Poisson sampling (the [MRTZ17] scheme) is provided for comparison.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Optional
 
 import numpy as np
@@ -16,11 +17,27 @@ from repro.fl.population import PopulationSim
 
 
 def fixed_size_sample(rng: np.random.Generator, ids: np.ndarray, k: int,
-                      weights: Optional[np.ndarray] = None) -> np.ndarray:
+                      weights: Optional[np.ndarray] = None, *,
+                      min_size: Optional[int] = None) -> np.ndarray:
     """Sample exactly k without replacement (weighted when Pace Steering
-    shapes priorities)."""
-    k = min(k, ids.shape[0])
-    return rng.choice(ids, size=k, replace=False, p=weights)
+    shapes priorities).
+
+    An under-populated check-in pool shrinks the round below the k that
+    σ = zS/qN was calibrated for — never silently: a short round warns with
+    realized-vs-target, and falls below ``min_size`` (a report goal) it
+    raises instead, the host-loop analogue of the engine's round abort."""
+    realized = min(k, ids.shape[0])
+    if min_size is not None and realized < min_size:
+        raise ValueError(
+            f"check-in pool supports only {realized} of the {k} requested "
+            f"clients — below the report goal ({min_size}); the round must "
+            "abort rather than release with σ calibrated to the full round")
+    if realized < k:
+        warnings.warn(
+            f"check-in pool supports only {realized} of the {k} requested "
+            "clients; σ = zS/qN is calibrated to the full round size",
+            RuntimeWarning, stacklevel=2)
+    return rng.choice(ids, size=realized, replace=False, p=weights)
 
 
 def poisson_sample(rng: np.random.Generator, ids: np.ndarray,
@@ -30,14 +47,18 @@ def poisson_sample(rng: np.random.Generator, ids: np.ndarray,
 
 def sample_round(pop: PopulationSim, rng: np.random.Generator,
                  round_idx: int, clients_per_round: int,
-                 scheme: str = "fixed") -> np.ndarray:
-    """Production round sampling: check-in → Pace-Steering weights → sample."""
+                 scheme: str = "fixed",
+                 min_size: Optional[int] = None) -> np.ndarray:
+    """Production round sampling: check-in → Pace-Steering weights → sample.
+    ``min_size`` (a report goal) makes a too-small fixed round raise instead
+    of shrinking silently — see :func:`fixed_size_sample`."""
     checked = pop.checked_in(round_idx)
     if scheme == "poisson":
         chosen = poisson_sample(rng, checked,
                                 clients_per_round / pop.n_users)
     else:
         w = pop.selection_weights(checked, round_idx)
-        chosen = fixed_size_sample(rng, checked, clients_per_round, w)
+        chosen = fixed_size_sample(rng, checked, clients_per_round, w,
+                                   min_size=min_size)
     pop.mark_participated(chosen, round_idx)
     return chosen

@@ -21,6 +21,7 @@ from repro.core.secret_sharer import make_canaries
 from repro.data.corpus import BigramCorpus
 from repro.data.federated import FederatedDataset
 from repro.data.population_store import MmapPopulationStore
+from repro.fl.faults import FaultConfig
 from repro.fl.round import FederatedTrainer
 from repro.models import build
 from repro.train import checkpoint
@@ -96,6 +97,42 @@ def main():
     ap.add_argument("--availability", type=float, default=0.3,
                     help="per-round device check-in probability; keep "
                          "availability·n_users above clients_per_round")
+    ap.add_argument("--fault-dropout", type=float, default=0.0,
+                    help="per-selected-client dropout probability (accepts "
+                         "the task, never reports); any fault flag > 0 "
+                         "enables the over-selection/report-goal round "
+                         "protocol (engine backend)")
+    ap.add_argument("--fault-straggler", type=float, default=0.0,
+                    help="fraction of selected clients whose report latency "
+                         "is Exponential(--fault-straggler-delay)")
+    ap.add_argument("--fault-straggler-delay", type=float, default=1.0,
+                    help="mean straggler report latency (same units as "
+                         "--fault-deadline)")
+    ap.add_argument("--fault-deadline", type=float, default=3.0,
+                    help="round deadline; straggler reports past it are "
+                         "dropped from the round")
+    ap.add_argument("--fault-corrupt", type=float, default=0.0,
+                    help="probability a delivered report is non-finite "
+                         "garbage (rejected by the server-side guard)")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed of the fault stream (disjoint from --seed's "
+                         "training PRNG chain)")
+    ap.add_argument("--report-goal", type=int, default=None,
+                    help="minimum usable reports for a round to commit; "
+                         "rounds below it abort (no server step, no privacy "
+                         "spend). Default: ceil(0.8 x clients_per_round) "
+                         "when faults are on")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="persist durable run state every N rounds (engine "
+                         "backend); 0 = only the final checkpoint")
+    ap.add_argument("--resume", action="store_true",
+                    help="continue from the run-state snapshot in --out if "
+                         "one exists; the finished run is bit-identical to "
+                         "an uninterrupted one")
+    ap.add_argument("--crash-after", type=int, default=None,
+                    help="simulate a crash: exit (skipping the final "
+                         "checkpoint) once this many rounds are done — for "
+                         "exercising --resume")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -146,6 +183,23 @@ def main():
     if population_backend == "streamed" and args.backend == "host":
         raise SystemExit("--population-backend streamed needs the engine "
                          "backend (the host loop reads the dataset directly)")
+    faults = None
+    if (args.fault_dropout > 0 or args.fault_straggler > 0
+            or args.fault_corrupt > 0 or args.report_goal is not None):
+        faults = FaultConfig(seed=args.fault_seed,
+                             dropout_prob=args.fault_dropout,
+                             straggler_prob=args.fault_straggler,
+                             straggler_mean_delay=args.fault_straggler_delay,
+                             round_deadline=args.fault_deadline,
+                             corrupt_prob=args.fault_corrupt,
+                             report_goal=args.report_goal)
+    if args.backend == "host" and (faults is not None or args.resume
+                                   or args.checkpoint_every > 0
+                                   or args.crash_after is not None):
+        raise SystemExit("--fault-*/--report-goal/--checkpoint-every/"
+                         "--resume/--crash-after need the engine backend "
+                         "(the fault protocol and durable run state live in "
+                         "the engine round bodies)")
     from repro.fl.population import PopulationSim
     pop = PopulationSim(n_users, availability=args.availability,
                         synthetic_ids=synth_ids, seed=args.seed)
@@ -157,15 +211,40 @@ def main():
                                cohort_chunk=args.cohort_chunk,
                                clip_path=args.clip_path,
                                population_backend=population_backend,
-                               population_store=store)
-    trainer.train(args.rounds, log_every=max(1, args.rounds // 20))
-
-    eps = trainer.accountant.get_epsilon(1e-6)
-    print(f"RDP accountant after {args.rounds} rounds: "
-          f"eps={eps:.2f} at delta=1e-6 (q={trainer.accountant.q:.4f})")
+                               population_store=store,
+                               fault_config=faults)
 
     out = Path(args.out)
     out.mkdir(parents=True, exist_ok=True)
+    log_every = max(1, args.rounds // 20)
+    state_path = out / f"{args.arch}_r{args.rounds}_state.msgpack"
+    done = 0
+    if args.resume and state_path.exists():
+        done = trainer.restore_run_state(state_path)
+        print(f"resumed from {state_path} at round {done}")
+    chunk = args.checkpoint_every if args.checkpoint_every > 0 \
+        else args.rounds
+    while done < args.rounds:
+        k = min(chunk - done % chunk, args.rounds - done)
+        if args.crash_after is not None:
+            k = min(k, args.crash_after - done)
+        trainer.train(k, log_every=log_every)
+        done += k
+        if args.checkpoint_every > 0 and done % args.checkpoint_every == 0 \
+                and done < args.rounds:
+            trainer.save_run_state(state_path)
+        if args.crash_after is not None and done >= args.crash_after:
+            print(f"simulated crash after round {done} "
+                  f"(resume with --resume)")
+            return
+
+    committed = sum(r.get("committed", True)
+                    for r in trainer.state.history)
+    eps = trainer.accountant.get_epsilon(1e-6)
+    print(f"RDP accountant after {args.rounds} rounds "
+          f"({committed} committed): eps={eps:.2f} at delta=1e-6 "
+          f"(q={trainer.accountant.q:.4f})")
+
     ck = out / f"{args.arch}_r{args.rounds}.msgpack"
     checkpoint.save(ck, trainer.state.params,
                     meta={"arch": args.arch, "rounds": str(args.rounds),

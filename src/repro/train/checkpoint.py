@@ -11,12 +11,22 @@ old checkpoints keep loading into the current model.
 """
 from __future__ import annotations
 
+import os
 import pathlib
+import struct
 from typing import Any, Dict, Tuple
 
 import jax
 import msgpack
 import numpy as np
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint file exists but cannot be decoded (truncated write,
+    corrupt bytes, or not a checkpoint at all). Raised by :func:`load` with
+    the offending path in the message; a missing file stays a plain
+    ``FileNotFoundError`` so callers can distinguish "resume from nothing"
+    from "durable state is damaged"."""
 
 
 def _pack_leaf(x):
@@ -59,14 +69,25 @@ def _decode(obj):
 
 
 def save(path, params, meta: Dict[str, Any] = None) -> None:
+    """Write atomically: serialize to a same-directory temp file, fsync,
+    then ``os.replace`` onto ``path``. A crash at any point leaves either
+    the previous durable file or the complete new one — never a torn
+    write."""
     path = pathlib.Path(path)
     path.parent.mkdir(parents=True, exist_ok=True)
     host = jax.tree_util.tree_map(np.asarray, params)
     blob = msgpack.packb({"meta": meta or {}, "tree": _encode(host)},
                          use_bin_type=True)
-    tmp = path.with_suffix(".tmp")
-    tmp.write_bytes(blob)
-    tmp.rename(path)  # atomic publish
+    tmp = path.with_name(f".{path.name}.tmp.{os.getpid()}")
+    try:
+        with open(tmp, "wb") as f:
+            f.write(blob)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)  # atomic publish
+    except BaseException:
+        tmp.unlink(missing_ok=True)
+        raise
 
 
 def migrate_lstm_gates(tree):
@@ -93,9 +114,17 @@ def migrate_lstm_gates(tree):
 
 
 def load(path) -> Tuple[Any, Dict[str, Any]]:
-    obj = msgpack.unpackb(pathlib.Path(path).read_bytes(), raw=True,
-                          strict_map_key=False)
-    meta = {k.decode() if isinstance(k, bytes) else k:
-            (v.decode() if isinstance(v, bytes) else v)
-            for k, v in obj[b"meta"].items()}
-    return migrate_lstm_gates(_decode(obj[b"tree"])), meta
+    path = pathlib.Path(path)
+    blob = path.read_bytes()   # missing file → plain FileNotFoundError
+    try:
+        obj = msgpack.unpackb(blob, raw=True, strict_map_key=False)
+        meta = {k.decode() if isinstance(k, bytes) else k:
+                (v.decode() if isinstance(v, bytes) else v)
+                for k, v in obj[b"meta"].items()}
+        return migrate_lstm_gates(_decode(obj[b"tree"])), meta
+    except (ValueError, KeyError, TypeError, IndexError, struct.error,
+            msgpack.exceptions.UnpackException,
+            msgpack.exceptions.ExtraData) as e:
+        raise CheckpointError(
+            f"corrupt or truncated checkpoint {path}: "
+            f"{type(e).__name__}: {e}") from e

@@ -71,3 +71,66 @@ def test_noise_multiplier_from_paper_sigma():
     from repro.configs import DPConfig
     dp = DPConfig()
     assert abs(dp.noise_std - 3.2e-5) < 1e-12
+
+
+# --------------------------- production fault protocol (variable round sizes)
+
+def test_record_round_composes_committed_only():
+    """Interleaved commits and aborts: the composed ε equals a clean run of
+    only the committed rounds — an aborted round released nothing, so it
+    composes nothing."""
+    acc = MomentsAccountant(q=0.005, noise_multiplier=0.8)
+    pattern = [True, False, True, True, False, False, True] * 10
+    for committed in pattern:
+        acc.record_round(committed)
+    n_committed = sum(pattern)
+    assert acc.rounds == n_committed
+    ref = MomentsAccountant(q=0.005, noise_multiplier=0.8)
+    ref.step(n_committed)
+    assert acc.get_epsilon(1e-8) == ref.get_epsilon(1e-8)
+
+
+def test_aborted_rounds_spend_zero_budget():
+    acc = MomentsAccountant(q=0.005, noise_multiplier=0.8)
+    e0 = acc.get_epsilon(1e-8, rounds=0)
+    for _ in range(50):
+        acc.record_round(committed=False)
+    assert acc.rounds == 0
+    assert acc.get_epsilon(1e-8) == e0
+
+
+def test_restore_rounds_round_trips():
+    acc = MomentsAccountant(q=0.005, noise_multiplier=0.8)
+    acc.step(123)
+    eps = acc.get_epsilon(1e-8)
+    fresh = MomentsAccountant(q=0.005, noise_multiplier=0.8)
+    fresh.restore_rounds(acc.rounds)
+    assert fresh.rounds == 123 and fresh.get_epsilon(1e-8) == eps
+    with pytest.raises(ValueError):
+        fresh.restore_rounds(-1)
+
+
+def test_epsilon_monotone_in_dropout():
+    """Higher dropout ⇒ fewer committed rounds ⇒ no more ε. Uses the real
+    fault stream with monotone coupling (same uniforms, higher threshold ⇒
+    the dropped set only grows, so the committed indicator is pointwise
+    non-increasing in dropout), with over-selection off so dropout actually
+    shrinks rounds."""
+    import jax
+    import numpy as np
+    from repro.fl.faults import FaultConfig, fault_fates
+
+    target, goal, rounds = 16, 12, 40
+    eps = []
+    for p in (0.0, 0.3, 0.6, 0.9):
+        cfg = FaultConfig(seed=0, dropout_prob=p, over_select=False,
+                          report_goal=goal)
+        key = jax.random.PRNGKey(cfg.seed)
+        acc = MomentsAccountant(q=0.005, noise_multiplier=0.8)
+        for r in range(rounds):
+            survivors = int(np.sum(np.asarray(
+                fault_fates(key, r, target, cfg).reported)))
+            acc.record_round(committed=survivors >= goal)
+        eps.append(acc.get_epsilon(1e-8))
+    assert all(a >= b for a, b in zip(eps, eps[1:]))
+    assert eps[0] > eps[-1]          # 90% dropout really does abort rounds

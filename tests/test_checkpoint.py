@@ -1,0 +1,67 @@
+"""Durable checkpoint hardening: corrupt files surface `CheckpointError`
+naming the path, missing files stay `FileNotFoundError`, and `save` is
+atomic (a crash mid-save never destroys the previous durable state)."""
+import numpy as np
+import pytest
+
+from repro.train import checkpoint
+
+
+@pytest.fixture
+def tree():
+    return {"layer": {"w": np.arange(12, dtype=np.float32).reshape(3, 4),
+                      "b": np.zeros(4, np.float32)},
+            "opt": (np.ones(3, np.float32), np.int32(7))}
+
+
+def test_roundtrip(tmp_path, tree):
+    p = tmp_path / "ck.msgpack"
+    checkpoint.save(p, tree, meta={"kind": "test"})
+    loaded, meta = checkpoint.load(p)
+    assert meta["kind"] == "test"
+    np.testing.assert_array_equal(loaded["layer"]["w"], tree["layer"]["w"])
+    assert isinstance(loaded["opt"], tuple)
+
+
+def test_truncated_file_raises_checkpoint_error(tmp_path, tree):
+    p = tmp_path / "ck.msgpack"
+    checkpoint.save(p, tree)
+    blob = p.read_bytes()
+    p.write_bytes(blob[:len(blob) // 2])
+    with pytest.raises(checkpoint.CheckpointError, match=str(p)):
+        checkpoint.load(p)
+
+
+def test_garbage_bytes_raise_checkpoint_error(tmp_path):
+    p = tmp_path / "junk.msgpack"
+    p.write_bytes(b"\x93not a checkpoint at all" * 10)
+    with pytest.raises(checkpoint.CheckpointError, match="junk.msgpack"):
+        checkpoint.load(p)
+
+
+def test_missing_file_stays_file_not_found(tmp_path):
+    # "resume from nothing" must be distinguishable from "state is damaged"
+    with pytest.raises(FileNotFoundError):
+        checkpoint.load(tmp_path / "never_written.msgpack")
+
+
+def test_failed_save_preserves_previous_durable_file(tmp_path, tree,
+                                                     monkeypatch):
+    p = tmp_path / "ck.msgpack"
+    checkpoint.save(p, tree, meta={"gen": "1"})
+    import os
+    real_replace = os.replace
+
+    def boom(src, dst):
+        raise OSError("disk died mid-publish")
+
+    monkeypatch.setattr(os, "replace", boom)
+    with pytest.raises(OSError, match="disk died"):
+        checkpoint.save(p, {"layer": {"w": np.zeros(2, np.float32)}},
+                        meta={"gen": "2"})
+    monkeypatch.setattr(os, "replace", real_replace)
+    loaded, meta = checkpoint.load(p)   # old state intact, still loadable
+    assert meta["gen"] == "1"
+    np.testing.assert_array_equal(loaded["layer"]["w"], tree["layer"]["w"])
+    # and no temp litter survived the failure
+    assert list(tmp_path.glob(".*.tmp.*")) == []

@@ -197,6 +197,47 @@ def test_poisson_mask_zeroes_excluded_slots(n_blocks, num_pods):
         np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
 
 
+# ------------------- report-goal calibration (production fault protocol)
+
+
+def test_sigma_calibrated_to_report_goal_not_realized_count():
+    """Under the fault protocol `finalize_round` gets the *report goal* as
+    the round size: σ = z·S/goal regardless of how many survivors actually
+    folded, and the released mean is clipped_sum/goal — so removing one
+    accepted client moves the release by at most S/goal, the sensitivity
+    the accountant's ε assumes. Dividing by a realized count (goal ± luck)
+    would make both σ and the sensitivity data-dependent — exactly what the
+    report-goal calibration forbids."""
+    goal, realized, clip, z = 10, 14, 0.8, 0.7
+    dp = DPConfig(clip_norm=clip, noise_multiplier=z,
+                  clients_per_round=goal)
+    clipped = _clipped_cohort(3, realized, clip)
+    mask = jnp.ones((realized,), jnp.float32)
+    total = jax.tree_util.tree_map(
+        lambda l: jnp.sum(l * mask.reshape((-1,) + (1,) * (l.ndim - 1)),
+                          axis=0), clipped)
+    # σ — identical whatever the realized count, because only `goal` enters
+    _, stats = finalize_round(total, goal, jax.random.PRNGKey(0), dp)
+    assert abs(float(stats.noise_std) - z * clip / goal) < 1e-8
+    # released mean is sum/goal: drop any one accepted client ⇒ the release
+    # moves by exactly ‖that client's clipped update‖/goal ≤ S/goal
+    dp0 = DPConfig(clip_norm=clip, noise_multiplier=0.0,
+                   clients_per_round=goal)
+    base, _ = finalize_round(total, goal, jax.random.PRNGKey(0), dp0)
+    for slot in (0, 7, realized - 1):
+        drop = mask.at[slot].set(0.0)
+        t2 = jax.tree_util.tree_map(
+            lambda l: jnp.sum(l * drop.reshape((-1,) + (1,) * (l.ndim - 1)),
+                              axis=0), clipped)
+        neigh, _ = finalize_round(t2, goal, jax.random.PRNGKey(0), dp0)
+        diff = jax.tree_util.tree_map(lambda a, b: a - b, base, neigh)
+        sens = float(tree_global_norm(diff))
+        assert sens <= clip / goal * (1 + 1e-4)
+        dev = jax.tree_util.tree_map(lambda l: l[slot] / goal, clipped)
+        np.testing.assert_allclose(sens, float(tree_global_norm(dev)),
+                                   rtol=1e-5)
+
+
 @pytest.mark.parametrize("sampling", ["fixed", "poisson"])
 def test_participation_identical_across_backends_and_shards(sampling):
     """Per-device participation counts — the quantity per-user privacy

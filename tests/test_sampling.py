@@ -50,9 +50,43 @@ def test_sample_round_caps_at_checked_in():
     """|cohort| = min(qN, #checked-in): tiny availability, huge request."""
     pop = PopulationSim(40, availability=0.2, seed=0)
     rng = np.random.default_rng(0)
-    ids = sample_round(pop, rng, 0, 1000)
+    with pytest.warns(RuntimeWarning, match="calibrated"):
+        ids = sample_round(pop, rng, 0, 1000)
     checked = (pop._last_round == 0).sum()
     assert ids.shape[0] == checked <= 40
+
+
+def test_short_round_warns_realized_vs_target():
+    """An under-populated pool shrinking the round is never silent — σ was
+    calibrated to the full round size."""
+    rng = np.random.default_rng(0)
+    with pytest.warns(RuntimeWarning, match=r"only 10 of the 40"):
+        out = fixed_size_sample(rng, np.arange(10), 40)
+    assert out.shape[0] == 10
+
+
+def test_full_round_does_not_warn():
+    rng = np.random.default_rng(0)
+    import warnings
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        out = fixed_size_sample(rng, np.arange(50), 40)
+    assert out.shape[0] == 40
+
+
+def test_round_below_report_goal_raises():
+    """With a report goal the host sampler aborts instead of releasing a
+    round smaller than the σ calibration."""
+    rng = np.random.default_rng(0)
+    with pytest.raises(ValueError, match="report goal"):
+        fixed_size_sample(rng, np.arange(10), 40, min_size=12)
+    # met goal: no raise, just the short-round warning
+    with pytest.warns(RuntimeWarning):
+        out = fixed_size_sample(rng, np.arange(10), 40, min_size=8)
+    assert out.shape[0] == 10
+    pop = PopulationSim(40, availability=0.2, seed=0)
+    with pytest.raises(ValueError, match="report goal"):
+        sample_round(pop, rng, 0, 1000, min_size=39)
 
 
 # ----------------------------- Poisson (host) ------------------------------

@@ -85,6 +85,13 @@ grep -q "sim_engine/population/.*backend=streamed" BENCH_ci.json || {
        "from BENCH_ci.json" >&2
   exit 1
 }
+# the production fault protocol must leave a per-PR trace: a faults record
+# proves the over-selection/report-goal round path (fault fates → masked
+# fold → commit/abort cond) actually ran in the smoke
+grep -q "sim_engine/faults/" BENCH_ci.json || {
+  echo "FAIL: sim_engine faults record missing from BENCH_ci.json" >&2
+  exit 1
+}
 
 echo "== smoke: continuous-batching serving benchmark (dry run) =="
 BENCH_JSON=BENCH_ci.json PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
