@@ -11,6 +11,11 @@ the whole window. Per concurrency level it reports:
   wait — the suggestion-strip user experience), emitted with p50 as the
   record's ``us_per_call``;
 * **QPS** (completed sessions/sec) and **tokens/sec** (decode throughput);
+* **p50 / p99 admission latency** (prefill + first token + slot scatter)
+  as a separate ``serve/admission/...`` record. Prompt lengths are drawn
+  from 2..MAX_PROMPT so the engine's power-of-two bucketed admission is
+  actually exercised: without bucketing every distinct length is its own
+  prefill compile and the p99 blows up on the first occurrence of each;
 
 and once per run a **checkpoint hot-swap drill**: with sessions in flight,
 a perturbed checkpoint is written to disk and promoted through
@@ -42,7 +47,8 @@ from repro.models import build
 from repro.serve import NwpRequest, ServeEngine
 from repro.train import checkpoint
 
-PROMPT_LEN = 4
+MIN_PROMPT = 2
+MAX_PROMPT = 12
 TOP_K = 3
 
 
@@ -54,9 +60,11 @@ def _setup(dry_run: bool):
     return model, model.init(jax.random.PRNGKey(0))
 
 
-def _submit_fresh(engine, rng, vocab, steps, temperature, uid):
+def _submit_fresh(engine, rng, vocab, steps, temperature, uid, length=None):
+    if length is None:
+        length = int(rng.integers(MIN_PROMPT, MAX_PROMPT + 1))
     prompt = (2,) + tuple(int(t) for t in
-                          rng.integers(4, vocab, PROMPT_LEN - 1))
+                          rng.integers(4, vocab, length - 1))
     engine.submit(NwpRequest(
         prompt=prompt, steps=steps, temperature=temperature,
         seed=int(uid) if temperature > 0 else None,
@@ -73,11 +81,18 @@ def closed_loop(model, params, *, concurrency: int, total: int, steps: int,
     rng = np.random.default_rng(seed)
     vocab = model.cfg.vocab
 
-    # warm-up: compile prefill/admission/tick off the clock
-    for i in range(concurrency):
-        _submit_fresh(engine, rng, vocab, steps, temperature, 10**9 + i)
+    # warm-up: compile admission/tick off the clock for *every* prompt
+    # length in the mix (every pow2 bucket when bucketed; every distinct
+    # length on the exact-length fallback path)
+    warm_lens = list(range(MIN_PROMPT, MAX_PROMPT + 1))
+    while len(warm_lens) < concurrency:
+        warm_lens.append(int(rng.integers(MIN_PROMPT, MAX_PROMPT + 1)))
+    for i, wl in enumerate(warm_lens):
+        _submit_fresh(engine, rng, vocab, steps, temperature, 10**9 + i,
+                      length=wl)
     engine.run()
     engine.pop_completed()
+    n_warm_adm = len(engine.admission_times_s)
 
     submitted = completed = tokens = 0
     latencies = []
@@ -94,8 +109,13 @@ def closed_loop(model, params, *, concurrency: int, total: int, steps: int,
             completed += 1
     wall = time.perf_counter() - t0
     lat_us = np.asarray(latencies) * 1e6
+    adm_us = np.asarray(engine.admission_times_s[n_warm_adm:]) * 1e6
     return {"p50_us": float(np.percentile(lat_us, 50)),
             "p99_us": float(np.percentile(lat_us, 99)),
+            "adm_p50_us": float(np.percentile(adm_us, 50)),
+            "adm_p99_us": float(np.percentile(adm_us, 99)),
+            "admissions": int(adm_us.shape[0]),
+            "bucketed": bool(engine.bucketed_admission),
             "qps": completed / wall,
             "toks_per_s": tokens / wall,
             "wall_s": wall,
@@ -149,6 +169,11 @@ def run(dry_run: bool = False):
              f"p99_us={s['p99_us']:.0f};qps={s['qps']:.2f};"
              f"toks_per_s={s['toks_per_s']:.0f};steps={steps};"
              f"sessions={s['sessions']};slots={concurrency}")
+        emit(f"serve/admission/concurrency={concurrency}", s["adm_p50_us"],
+             f"p99_us={s['adm_p99_us']:.0f};"
+             f"admissions={s['admissions']};"
+             f"bucketed={int(s['bucketed'])};"
+             f"prompt_lens={MIN_PROMPT}..{MAX_PROMPT}")
     drill_c = 4 if dry_run else 32
     swap_us, d = hot_swap_drill(model, params, concurrency=drill_c,
                                 steps=steps)

@@ -45,11 +45,16 @@ tracked per PR.
 
 ``--population-sweep`` benchmarks the *streamed population backend*
 (`SimEngine(population_backend="streamed")`, PR 7) across population sizes
-10³ → 10⁶: the corpus stays host-resident (a `ReplicatedPopulationStore`
-view at large N) and only two ping-ponged cohort buffers live on device, so
-rounds/sec should stay flat in N while ``device_corpus_bytes`` stays
-constant — vs the device-resident reference whose corpus residency grows
-linearly. The dry run emits one streamed + one device record into
+10³ → 10⁶ (10⁷ sharded-sampler-only): the corpus stays host-resident (a
+`ReplicatedPopulationStore` view at large N) and only two ping-ponged
+cohort buffers live on device, so rounds/sec should stay flat in N while
+``device_corpus_bytes`` stays constant — vs the device-resident reference
+whose corpus residency grows linearly. Each streamed size runs under both
+cohort samplers (``sampler=global`` / ``sampler=sharded`` in the record
+tag) with the per-round time split into ``sample_s`` vs ``compute_s``, so
+the sharded sampler's O(N)-selection win is attributable; the global
+sampler's O(N) argsort is what bends the global curve down past 10⁵. The
+dry run emits device + streamed×{global, sharded} records into
 ``BENCH_ci.json`` (asserted by `tools/ci.sh`); the nightly full sweep lands
 in ``BENCH_population.json``.
 
@@ -281,16 +286,23 @@ def pod_sweep(dry_run: bool = False):
 
 
 def _population_record(model, data, dp, cl, *, backend, n_users, rounds,
-                       warmup, rpc, ref_rps=None):
+                       warmup, rpc, sampler="global", ref_rps=None):
     """One population-scale record: rounds/sec through `SimEngine.run` at
-    this ``population_backend``, plus the memory accounting that is the
-    point of the streamed backend — ``device_corpus_bytes`` (what the
-    backend keeps resident on device for the population payload: the whole
-    padded corpus, or two ping-ponged cohort buffers independent of N) and
-    ``host_corpus_bytes`` (the virtual population payload)."""
+    this ``population_backend`` × ``sampler``, plus the memory accounting
+    that is the point of the streamed backend — ``device_corpus_bytes``
+    (what the backend keeps resident on device for the population payload:
+    the whole padded corpus, or two ping-ponged cohort buffers independent
+    of N) and ``host_corpus_bytes`` (the virtual population payload).
+
+    The per-round time is split into ``sample_s`` (the cohort-selection +
+    population-vector chain, timed alone through the same jitted sampler
+    body via `SimEngine.run_sampler`) and ``compute_s`` (the remainder:
+    staging + local SGD + reduction + server step) so the sampler's O(N)
+    share — the thing ``sampler="sharded"`` attacks — is attributable per
+    record."""
     eng = SimEngine(model, data, dp, cl, n_local_batches=2,
                     availability=0.5, rounds_per_call=rpc,
-                    population_backend=backend)
+                    sampler=sampler, population_backend=backend)
     state = eng.init_state(model.init(jax.random.PRNGKey(1)), seed=0)
     # warmup/rounds are multiples of rpc so the device backend's k-round
     # scan compiles exactly once, outside the timed window
@@ -299,17 +311,25 @@ def _population_record(model, data, dp, cl, *, backend, n_users, rounds,
     state, _ = eng.run(state, rounds)
     jax.block_until_ready(state.params)
     rps = rounds / (time.perf_counter() - t0)
+    # sampler-only attribution: same chain, fresh state, no staging/compute
+    sstate = eng.init_state(model.init(jax.random.PRNGKey(1)), seed=0)
+    sstate = eng.run_sampler(sstate, warmup)
+    t0 = time.perf_counter()
+    eng.run_sampler(sstate, rounds)
+    sample_s = (time.perf_counter() - t0) / rounds
+    compute_s = max(1.0 / rps - sample_s, 0.0)
     row_bytes = eng.emax * eng.row_len * 4
     dev = (n_users * row_bytes if backend == "device"
            else 2 * eng.padded * row_bytes)
     derived = (f"rounds_per_sec={rps:.3f};"
+               f"sample_s={sample_s:.4f};compute_s={compute_s:.4f};"
                f"device_corpus_bytes={dev};"
                f"host_corpus_bytes={n_users * row_bytes};"
                f"cohort_padded={eng.padded}")
     if ref_rps is not None:
         derived += f";vs_device_base={rps / ref_rps:.2f}x"
-    emit(f"sim_engine/population/n_users={n_users}/backend={backend}",
-         1e6 / rps, derived)
+    emit(f"sim_engine/population/n_users={n_users}/backend={backend}/"
+         f"sampler={eng.sampler}", 1e6 / rps, derived)
     return rps
 
 
@@ -345,10 +365,21 @@ def population_sweep(dry_run: bool = False):
     for n in sizes:
         store = (base if n == base_users
                  else ReplicatedPopulationStore(base, n))
-        results[n] = _population_record(model, store, dp, cl,
-                                        backend="streamed", n_users=n,
-                                        rounds=rounds, warmup=warmup,
-                                        rpc=rpc, ref_rps=ref)
+        for sampler in ("global", "sharded"):
+            results[(n, sampler)] = _population_record(
+                model, store, dp, cl, backend="streamed", n_users=n,
+                rounds=rounds, warmup=warmup, rpc=rpc, sampler=sampler,
+                ref_rps=ref)
+    # the fleet-scale point: N=10⁷ is sharded-sampler-only — the global
+    # sampler's O(N) argsort makes it minutes per timed window out there,
+    # which is the regime boundary this record documents
+    if not dry_run:
+        n = 10_000_000
+        results[(n, "sharded")] = _population_record(
+            model, ReplicatedPopulationStore(base, n), dp, cl,
+            backend="streamed", n_users=n, rounds=max(rounds // 2, 10),
+            warmup=max(warmup // 2, 4), rpc=rpc, sampler="sharded",
+            ref_rps=ref)
     return results
 
 

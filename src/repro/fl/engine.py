@@ -165,6 +165,7 @@ from repro.core.dp_fedavg import finalize_round, server_step
 from repro.core.server_optim import ServerOptState, init_state
 from repro.data.population_store import PopulationStore, as_population_store
 from repro.data.tokenizer import PAD
+from repro.fl import pop_sampler
 from repro.fl.client import (client_updates, local_deltas,
                              stream_block_sums)
 from repro.fl.faults import FaultConfig, fault_fates
@@ -181,12 +182,13 @@ from repro.sharding.specs import (batch_axes, cohort_spec,
 from repro.utils.compat import shard_map
 
 __all__ = ["CANON_BLOCKS", "EngineState", "FaultConfig",
-           "POPULATION_BACKENDS", "SimEngine", "canon_pad", "cohort_sum",
-           "gather_client_batches", "gather_cohort_batches",
+           "POPULATION_BACKENDS", "SAMPLERS", "SimEngine", "canon_pad",
+           "cohort_sum", "gather_client_batches", "gather_cohort_batches",
            "n_canon_blocks", "pace_steering_weights", "poisson_select",
            "sample_cohort"]
 
 POPULATION_BACKENDS = ("device", "streamed")
+SAMPLERS = ("global", "sharded")
 
 
 class EngineState(NamedTuple):
@@ -358,6 +360,20 @@ class SimEngine:
     residency independent of N, bit-exact against ``"device"`` (see the
     module docstring).
 
+    ``sampler`` selects the cohort-selection implementation: ``"global"``
+    (default) is the monolithic O(N)-on-one-device program — availability
+    draw, Pace-Steering weights, ``jax.random.choice``'s Gumbel argsort —
+    bit-identical to every pre-sampler-knob trajectory; ``"sharded"`` lays
+    the population axis out in canonical blocks, draws per-block from
+    fold-in-keyed streams, and selects by per-shard Gumbel **top-k** merged
+    through a canonical lex sort (`fl.pop_sampler`) — an exact weighted
+    sample that shards the O(N) state and work over the same mesh as the
+    cohort, with only O(cohort) candidates crossing shards. The two are
+    *different sampler families* (different PRNG layouts ⇒ different —
+    equally valid — trajectories); within the sharded family trajectories
+    are deterministic in the seed and bit-exact across {pods} × {shards} ×
+    {chunk} × {device, streamed} × {fixed, poisson} × {faults on/off}.
+
     ``clip_path`` selects the per-client clip→accumulate implementation:
     ``"fused"`` (default) runs the flat-parameter Pallas ``dp_clip`` kernels
     (interpret mode on CPU, compiled on TPU); ``"tree"`` the pytree
@@ -381,6 +397,7 @@ class SimEngine:
                  cohort_chunk: Optional[int] = None,
                  clip_path: str = "fused",
                  population_backend: str = "device",
+                 sampler: str = "global",
                  fault_config: Optional[FaultConfig] = None,
                  eval_fn: Optional[Callable] = None, eval_every: int = 1):
         self.model = model
@@ -455,6 +472,30 @@ class SimEngine:
         self.n_users = int(synth_np.shape[0])
         self.cohort = min(dp.clients_per_round, self.n_users)
         self.q = self.cohort / self.n_users
+        if sampler not in SAMPLERS:
+            raise ValueError(f"sampler must be one of {SAMPLERS}, "
+                             f"got {sampler!r}")
+        self.sampler = sampler
+        if sampler == "sharded":
+            # population axis laid out in canonical blocks (pop_sampler
+            # parity contract): padded length + block grid are fixed across
+            # every topology in the parity family, and the per-user vectors
+            # (plus this synthetic mask) shard over the batch axes
+            self.pop_blocks = pop_sampler.n_pop_blocks(self.num_shards,
+                                                       self.num_pods)
+            self.n_pad = pop_sampler.pop_pad(self.n_users, self.num_shards,
+                                             self.num_pods)
+            synth_pad = np.zeros(self.n_pad, bool)
+            synth_pad[:self.n_users] = synth_np
+            self._synth_pad = jnp.asarray(synth_pad)
+            if self.mesh is not None:
+                self._synth_pad = jax.device_put(
+                    self._synth_pad,
+                    NamedSharding(self.mesh, self._cohort_pspec))
+        else:
+            self.pop_blocks = None
+            self.n_pad = self.n_users
+            self._synth_pad = None
         # production fault model: over-select so the *expected* survivor
         # count is the target cohort, and calibrate σ (and the released
         # mean) to the report goal — never the realized survivor count.
@@ -587,18 +628,39 @@ class SimEngine:
 
     def init_state(self, params, seed: int = 0,
                    opt_state: Optional[ServerOptState] = None) -> EngineState:
+        # the sharded sampler owns (n_pad,) population vectors — padded to
+        # the canonical population block grid and mesh-sharded; the global
+        # sampler keeps the exact (n_users,) replicated layout
         state = EngineState(
             params=params,
             opt_state=opt_state if opt_state is not None else init_state(params),
             key=jax.random.PRNGKey(seed),
-            last_round=jnp.full((self.n_users,), -(10 ** 9), jnp.int32),
-            participation=jnp.zeros((self.n_users,), jnp.int32),
+            last_round=jnp.full((self.n_pad,), -(10 ** 9), jnp.int32),
+            participation=jnp.zeros((self.n_pad,), jnp.int32),
             round_idx=jnp.zeros((), jnp.int32))
-        if self.mesh is not None:
+        return self.place_state(state)
+
+    def place_state(self, state: EngineState) -> EngineState:
+        """Commit an :class:`EngineState` to the engine's device layout (the
+        init / run-state-restore placement): everything replicated across
+        the cohort mesh — except the population vectors under
+        ``sampler="sharded"``, which shard over the batch axes so the
+        donated round bodies keep one stable layout. No-op off-mesh."""
+        if self.mesh is None:
+            return state
+        repl = NamedSharding(self.mesh, P())
+        if self.sampler == "global":
             # commit replicated across the cohort mesh so the donated scan
             # carry keeps one stable layout (no resharding between chunks)
-            state = jax.device_put(state, NamedSharding(self.mesh, P()))
-        return state
+            return jax.device_put(state, NamedSharding(self.mesh, P()))
+        pop = NamedSharding(self.mesh, self._cohort_pspec)
+        return EngineState(
+            params=jax.device_put(state.params, repl),
+            opt_state=jax.device_put(state.opt_state, repl),
+            key=jax.device_put(state.key, repl),
+            last_round=jax.device_put(state.last_round, pop),
+            participation=jax.device_put(state.participation, pop),
+            round_idx=jax.device_put(state.round_idx, repl))
 
     # ------------------------------------------------------------- round body
 
@@ -771,6 +833,102 @@ class SimEngine:
             in_specs=(P(), cspec, cspec, cspec), out_specs=P())
         return sharded(params, batch_args, slot_mask, corrupt)
 
+    def _pop_shard_body(self, rank, k_avail, k_sample, round_idx,
+                        last_round, participation, synthetic, axes=None):
+        """One shard's slice of the sharded sampler round: block-keyed
+        availability / score / Bernoulli draws over the shard's contiguous
+        population rows, local candidate selection, the canonical
+        (replicated) merge, fault fates, and the O(cohort) masked scatter
+        updates of the local population-vector rows. Runs identically as
+        the whole program when ``total_shards == 1`` (``rank=0``,
+        ``axes=None`` skips the gathers) — the merge consumes the same
+        candidate lists either way, which is the topology bit-exactness
+        argument (see `fl.pop_sampler`)."""
+        n_loc = last_round.shape[0]              # n_pad / total_shards
+        nb_loc = self.pop_blocks // self.total_shards
+        blk = n_loc // nb_loc
+        offset = rank * n_loc
+        block_ids = rank * nb_loc + jnp.arange(nb_loc)
+        valid = (offset + jnp.arange(n_loc)) < self.n_users
+        avail = ((pop_sampler.block_uniforms(k_avail, block_ids, blk)
+                  .reshape(-1) < self.availability) | synthetic) & valid
+        if self.sampling == "poisson":
+            u = pop_sampler.block_uniforms(k_sample, block_ids, blk
+                                           ).reshape(-1)
+            sel = (u < self.sel_q) & avail
+            gids, cnt = pop_sampler.pack_selected(sel, self.padded, offset)
+            if axes is not None:
+                gids = pop_sampler.gather_shards(gids, axes)
+                cnt = pop_sampler.gather_shards(cnt[None], axes)
+            ids, slot_mask = pop_sampler.merge_poisson(gids, cnt,
+                                                       self.padded)
+        else:
+            w = self.weight_fn(last_round, synthetic, round_idx)
+            g = pop_sampler.block_gumbels(k_sample, block_ids, blk
+                                          ).reshape(-1)
+            score = jnp.log(jnp.where(avail, w.astype(jnp.float32),
+                                      _UNAVAILABLE_W)) + g
+            skey = jnp.where(valid, pop_sampler.sortable_f32(score),
+                             pop_sampler.INT32_MIN)
+            k_loc = min(self.sel_cohort, n_loc)
+            vals, lidx = pop_sampler.blocked_topk(skey, k_loc)
+            gids = (offset + lidx).astype(jnp.int32)
+            if axes is not None:
+                vals = pop_sampler.gather_shards(vals, axes)
+                gids = pop_sampler.gather_shards(gids, axes)
+            cohort_ids = pop_sampler.merge_topk(vals, gids, self.sel_cohort)
+            ids = jnp.pad(cohort_ids, (0, self.padded - self.sel_cohort))
+            slot_mask = jnp.arange(self.padded) < self.sel_cohort
+        if self.faults is None:
+            report_mask, corrupt = slot_mask, None
+        else:
+            # replicated math from replicated inputs: every shard computes
+            # the identical fates (the stream is slot-level, exactly as in
+            # global mode)
+            fates = fault_fates(self._fault_key, round_idx, self.padded,
+                                self.faults)
+            report_mask = slot_mask & fates.reported
+            corrupt = report_mask & fates.corrupt
+        # O(cohort) local scatters — same semantics as the global path:
+        # last_round reacts to selection, participation to arrived reports
+        last_round = pop_sampler.scatter_max(last_round, ids, slot_mask,
+                                             round_idx, offset)
+        part_mask = slot_mask if self.faults is None else report_mask
+        participation = pop_sampler.scatter_add(participation, ids,
+                                                part_mask, offset)
+        out = (last_round, participation, ids, slot_mask, report_mask)
+        return out if corrupt is None else out + (corrupt,)
+
+    def _sharded_select(self, k_avail, k_sample, round_idx, last_round,
+                        participation):
+        """Dispatch :meth:`_pop_shard_body` — directly on one device, or
+        under ``shard_map`` over the cohort mesh with the population
+        vectors sharded along the batch axes and everything else
+        replicated."""
+        if self.total_shards == 1:
+            out = self._pop_shard_body(0, k_avail, k_sample, round_idx,
+                                       last_round, participation,
+                                       self._synth_pad)
+        else:
+            axes = batch_axes(self._mesh_config)
+            pspec = self._cohort_pspec
+
+            def body(k_a, k_s, r, lr, part, synth):
+                rank = pop_sampler.shard_rank(axes, self.num_shards)
+                return self._pop_shard_body(rank, k_a, k_s, r, lr, part,
+                                            synth, axes=axes)
+
+            n_out = 5 if self.faults is None else 6
+            out = shard_map(
+                body, mesh=self.mesh,
+                in_specs=(P(), P(), P(), pspec, pspec, pspec),
+                out_specs=(pspec, pspec) + (P(),) * (n_out - 2))(
+                    k_avail, k_sample, round_idx, last_round, participation,
+                    self._synth_pad)
+        if self.faults is None:
+            return out + (None,)
+        return out
+
     def _sample_phase(self, key, last_round, participation, round_idx):
         """The round's sampling prefix, shared verbatim by the device scan
         body (:meth:`_round_body`) and the streamed sampler body
@@ -787,8 +945,23 @@ class SimEngine:
         contacted the device whatever happened next — while
         ``participation`` counts only slots whose report actually arrived
         (dropped/late excluded; corrupt reports did arrive, so they
-        count)."""
+        count).
+
+        ``sampler="sharded"`` swaps the monolithic selection (global
+        availability draw + ``random.choice``'s argsort over N) for the
+        block-local Gumbel top-k of `fl.pop_sampler` — a *different*
+        sampler family (its PRNG layout is per-block), deterministic in the
+        seed and bit-exact across topologies/backends/chunk sizes, sharing
+        this same top-level key split so ``keys``/``k_noise`` (and hence
+        the whole compute phase given a cohort) are family-independent."""
         key, k_avail, k_sample, k_idx, k_noise = jax.random.split(key, 5)
+        if self.sampler == "sharded":
+            last_round, participation, ids, slot_mask, report_mask, \
+                corrupt = self._sharded_select(k_avail, k_sample, round_idx,
+                                               last_round, participation)
+            keys = jax.random.split(k_idx, self.padded)
+            return (key, last_round, participation,
+                    (ids, slot_mask, report_mask, corrupt, keys, k_noise))
         avail = (jax.random.uniform(k_avail, (self.n_users,))
                  < self.availability) | self.synthetic
         if self.sampling == "poisson":
@@ -1011,6 +1184,23 @@ class SimEngine:
                                 sstate.last_round, sstate.participation,
                                 sstate.round_idx)
         return new_state, hist
+
+    def run_sampler(self, state: EngineState, n_rounds: int) -> EngineState:
+        """Sampling-only loop (benchmark attribution): advance the sampler
+        chain — cohort selection + population-vector updates — ``n_rounds``
+        times through the same jitted :meth:`_sample_body` both backends
+        use, skipping staging and compute. Consumes the round PRNG stream
+        exactly as a full round would, so wall time here *is* the round's
+        ``sample_s`` share. Inputs are kept alive (no donation)."""
+        sample_jit, _ = self._streamed_fns(False)
+        sstate = _SamplerState(state.key, state.last_round,
+                               state.participation, state.round_idx)
+        for _ in range(n_rounds):
+            sstate, out = sample_jit(sstate)
+        jax.block_until_ready(sstate)
+        return EngineState(state.params, state.opt_state, sstate.key,
+                           sstate.last_round, sstate.participation,
+                           sstate.round_idx)
 
     # ------------------------------------------------------------------ entry
 

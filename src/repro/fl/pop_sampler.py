@@ -1,0 +1,219 @@
+"""Mesh-sharded O(N) population sampler: block-local Gumbel top-k.
+
+The engine's default (``sampler="global"``) cohort selection is a monolithic
+O(N) program on one device: a full-population availability draw, the
+Pace-Steering weight pass, and ``jax.random.choice(replace=False)`` — a
+Gumbel perturbation followed by a *full argsort over N*. At N = 10⁶ that
+argsort alone is ~95% of the sample phase. This module provides the
+``sampler="sharded"`` selection primitives: the population axis is laid out
+in canonical blocks (the `fl.reduction` association trick applied to users
+instead of cohort slots), every per-user draw comes from a *block-keyed*
+stream, and selection is an exact Gumbel **top-k** — O(N log cohort) work
+that shards over the ``(pod, data)`` mesh with only O(cohort) candidates
+crossing shard boundaries.
+
+Parity contract (the per-block sampler PRNG layout)
+---------------------------------------------------
+
+The sharded sampler is a *different* sampler family than ``"global"`` (its
+PRNG stream differs from ``jax.random.choice``'s), but within the family its
+trajectories are bit-exact across every execution topology. Three rules make
+that hold by construction, and they are load-bearing — treat them as a
+frozen contract (tests/test_sampler_sharded.py):
+
+* **block-keyed draws** — the padded population axis (``pop_pad(n_users)``
+  rows) splits into :data:`~repro.fl.reduction.CANON_BLOCKS` equal
+  contiguous blocks; block ``b``'s availability / Gumbel / Bernoulli
+  uniforms are drawn from ``fold_in(key, b)``, **never** from a single
+  population-shaped draw. A shard owns a contiguous group of whole blocks,
+  so every topology generates identical per-user randomness.
+* **total-order selection** — a candidate's rank is the lexicographic pair
+  ``(-score, user_id)`` with the f32 score mapped to order-isomorphic int32
+  bits (:func:`sortable_f32`). The K best under a total order are a
+  *unique set in a unique order*, so flat top-k on one device and per-shard
+  top-k merged through :func:`merge_topk` agree bitwise — an identity, not
+  an approximation (the global lex top-K is contained in the union of
+  per-shard lex top-k's). Per-shard ties rely on ``jax.lax.top_k``
+  returning equal values lowest-index-first; the adversarial-tie property
+  test pins that platform behavior. The per-shard top-k itself runs
+  through :func:`blocked_topk` — a chunk-max-pruned evaluation that is
+  bit-identical to ``lax.top_k`` (same values, same stable ties) but
+  skips XLA's whole-shard sort, which would otherwise dominate the
+  sample phase at fleet N.
+* **index-order Poisson packing** — a Poisson round's buffer holds the
+  first ``buffer`` selected users in global index order; per-shard packing
+  + :func:`merge_poisson`'s sort reproduces exactly that set (within a
+  shard, local index order *is* global index order).
+
+Population-vector updates (``last_round`` / ``participation``) are
+O(cohort) masked scatters against the shard's local rows — nothing O(N)
+ever crosses the mesh.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.fl.reduction import canon_pad, n_canon_blocks
+
+__all__ = ["INT32_MIN", "block_gumbels", "block_uniforms", "blocked_topk",
+           "gather_shards", "merge_poisson", "merge_topk", "pack_selected",
+           "pop_pad", "n_pop_blocks", "scatter_max", "scatter_add",
+           "shard_rank", "sortable_f32"]
+
+# Reserved sentinel sort key for padded (beyond-n_users) rows: strictly below
+# every real score's key (even -inf maps above it), so padding can never be
+# selected while cohort <= n_users.
+INT32_MIN = jnp.int32(-(2 ** 31))
+
+
+def pop_pad(n_users: int, num_shards: int = 1, num_pods: int = 1) -> int:
+    """Padded population-axis length: smallest multiple of the canonical
+    population block count ≥ ``n_users``. Identical for every topology whose
+    ``num_pods · num_shards`` divides `reduction.CANON_BLOCKS` — the same
+    rule (and the same reason) as the cohort buffer's `reduction.canon_pad`:
+    a topology-independent block grid is what makes the block-keyed draws
+    land on the same users everywhere."""
+    return canon_pad(n_users, num_shards, num_pods)
+
+
+def n_pop_blocks(num_shards: int = 1, num_pods: int = 1) -> int:
+    """Population block count — the cohort reduction's
+    `reduction.n_canon_blocks` rule applied to the user axis."""
+    return n_canon_blocks(num_shards, num_pods)
+
+
+def shard_rank(axes, num_shards: int):
+    """Pod-major linear shard rank inside a ``shard_map`` body — matches the
+    pod-major cohort layout, so shard ``r`` owns population rows
+    ``[r·n_loc, (r+1)·n_loc)``."""
+    if len(axes) == 1:
+        return jax.lax.axis_index(axes[0])
+    return (jax.lax.axis_index(axes[0]) * num_shards
+            + jax.lax.axis_index(axes[1]))
+
+
+def block_uniforms(key, block_ids, blk: int):
+    """(n_blocks_local, blk) uniforms, block ``b`` drawn from
+    ``fold_in(key, b)`` — the topology-independent per-user stream."""
+    return jax.vmap(
+        lambda b: jax.random.uniform(jax.random.fold_in(key, b), (blk,))
+    )(block_ids)
+
+
+def block_gumbels(key, block_ids, blk: int):
+    """(n_blocks_local, blk) standard Gumbel draws, block-keyed like
+    :func:`block_uniforms`."""
+    return jax.vmap(
+        lambda b: jax.random.gumbel(jax.random.fold_in(key, b), (blk,))
+    )(block_ids)
+
+
+def sortable_f32(x):
+    """Map f32 → int32 preserving order: ``a < b  ⟺  s(a) < s(b)`` (signed
+    int compare), for every finite value and ±inf. Sign-magnitude float bits
+    become two's-complement by flipping negative values' magnitude bits
+    (``~u``) and re-centering (``^ INT32_MIN``); non-negative floats are
+    already correctly ordered as int32. NaN maps above +inf (scores are
+    log-weight + Gumbel — finite by construction)."""
+    u = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.int32)
+    return jnp.where(u < 0, jnp.bitwise_xor(~u, INT32_MIN), u)
+
+
+def gather_shards(x, axes):
+    """all_gather a per-shard candidate array into the replicated pod-major
+    concatenation: (k, ...) local → (S·k, ...), shard ``r``'s slice at
+    ``[r·k, (r+1)·k)``. Carries raw candidates only — no arithmetic — so
+    every shard merges the identical list."""
+    g = jax.lax.all_gather(x, axes[-1])
+    if len(axes) == 2:
+        g = jax.lax.all_gather(g, axes[0])
+    return g.reshape((-1,) + x.shape[1:])
+
+
+def blocked_topk(skey, k: int, chunk: int = 256):
+    """Exact drop-in for ``jax.lax.top_k(skey, k)`` (bit-identical values
+    *and* stable lowest-index tie-break) that prunes with contiguous chunk
+    maxima first — XLA's CPU top-k over a whole shard is ~95% of the sample
+    phase at fleet N, while this is one O(n) max-reduce, a top-k over
+    ``n/chunk`` chunk maxima, and a lex sort of ``k·chunk`` candidates.
+
+    Exactness: rank chunks by ``(max, chunk_index)`` (``lax.top_k``'s own
+    stable order) and keep the best ``k``. Chunks are *contiguous* in index,
+    so if element ``x``'s chunk is not kept, each of the ``k`` kept chunks
+    holds a maximum that either strictly beats ``x`` or ties it with a
+    strictly smaller index (the kept chunk's index — hence all its indices —
+    is smaller than ``x``'s) — ``k`` elements ranked above ``x``, so ``x``
+    is not in the stable top-k. Tail padding uses :data:`INT32_MIN` at
+    indices ≥ n, which loses every tie to real rows by the index order."""
+    n = skey.shape[0]
+    if n < chunk * k:          # pruning can't win (or c < k): direct top-k
+        return jax.lax.top_k(skey, k)
+    c = -(-n // chunk)
+    if c * chunk != n:
+        skey = jnp.concatenate(
+            [skey, jnp.full((c * chunk - n,), INT32_MIN, skey.dtype)])
+    tiles = skey.reshape(c, chunk)
+    _, cidx = jax.lax.top_k(jnp.max(tiles, axis=1), k)
+    cand = tiles[cidx].reshape(-1)
+    lidx = (cidx[:, None] * chunk
+            + jnp.arange(chunk)).reshape(-1).astype(jnp.int32)
+    sneg, sidx = jax.lax.sort((~cand, lidx), num_keys=2)
+    return ~sneg[:k], sidx[:k]
+
+
+def merge_topk(vals, gids, k: int):
+    """Canonical merge of per-shard top-k candidates: ascending lex sort on
+    ``(~vals, gids)`` — i.e. score descending, user id ascending on ties (a
+    total order, so any merge bracketing yields this same result) — and the
+    first ``k`` user ids are the global lex top-K. ``vals`` are
+    :func:`sortable_f32` keys; ``~`` is the overflow-free order reversal."""
+    _, ids = jax.lax.sort((~vals, gids), num_keys=2)
+    return ids[:k]
+
+
+def pack_selected(sel, buffer: int, offset):
+    """Per-shard Poisson packing: the first ``buffer`` selected *local* rows
+    in index order as global user ids, vacant candidate slots filled with
+    the int32 max sentinel (sorts after every real id in
+    :func:`merge_poisson`). Returns ``(gids (buffer,), count ())``."""
+    n_loc = sel.shape[0]
+    lidx = jnp.nonzero(sel, size=buffer, fill_value=n_loc)[0]
+    gids = jnp.where(lidx < n_loc, lidx + offset, jnp.iinfo(jnp.int32).max
+                     ).astype(jnp.int32)
+    return gids, jnp.minimum(jnp.sum(sel), buffer)
+
+
+def merge_poisson(gids_all, counts_all, buffer: int):
+    """Merge per-shard Poisson candidate lists into the exact global
+    packing: ascending sort puts real ids in global index order (sentinels
+    last), and the first ``buffer`` are precisely the globally-first
+    ``buffer`` selected users — each belongs to its shard's first
+    ``buffer``, so per-shard truncation never drops one. Returns
+    ``(ids (buffer,), slot_mask (buffer,))`` with vacant slots id 0, like
+    `engine.poisson_select`."""
+    merged = jnp.sort(gids_all)[:buffer]
+    n_took = jnp.minimum(jnp.sum(counts_all), buffer)
+    slot_mask = jnp.arange(buffer) < n_took
+    return jnp.where(slot_mask, merged, 0), slot_mask
+
+
+def scatter_max(vec, ids, mask, value, offset):
+    """O(cohort) masked scatter-max of ``value`` into the shard's local rows
+    (``vec`` (n_loc,)): out-of-shard or masked slots contribute the int32
+    minimum — a no-op under max. Duplicate padded ids are safe (max folds
+    them)."""
+    n_loc = vec.shape[0]
+    lid = ids - offset
+    ok = mask & (lid >= 0) & (lid < n_loc)
+    return vec.at[jnp.clip(lid, 0, n_loc - 1)].max(
+        jnp.where(ok, value, INT32_MIN))
+
+
+def scatter_add(vec, ids, mask, offset):
+    """O(cohort) masked scatter-add of 1 into the shard's local rows:
+    out-of-shard or masked slots add exactly 0."""
+    n_loc = vec.shape[0]
+    lid = ids - offset
+    ok = mask & (lid >= 0) & (lid < n_loc)
+    return vec.at[jnp.clip(lid, 0, n_loc - 1)].add(ok.astype(vec.dtype))

@@ -35,6 +35,14 @@ Masked slots contribute *exactly* zero: ``0·x ∈ {+0, −0}`` and IEEE-754
 addition of a signed zero to any accumulator that is not ``−0`` is exact;
 the accumulators start at ``+0`` and a round-to-nearest sum can only produce
 ``−0`` from ``−0`` operands, so the fold never creates one.
+
+The same canonical block grid (:func:`canon_pad` / :func:`n_canon_blocks`)
+also lays out the *population* axis under the sharded cohort sampler —
+`fl.pop_sampler` re-exports the pair as ``pop_pad`` / ``n_pop_blocks``.
+There the blocks carry no float association (selection is an exact
+integer-keyed top-k); what they provide is the topology-independent
+*block-keyed PRNG* layout, the sampler analogue of this module's
+topology-independent association.
 """
 from __future__ import annotations
 

@@ -42,6 +42,14 @@ engine stages one cohort per round onto device — trajectories stay
 bit-exact against the device-resident default. A ``population_store`` may
 replace the ``dataset`` entirely (pass ``dataset=None``) for
 population-scale runs where no `FederatedDataset` is ever materialized.
+
+Engine backends also accept ``sampler="sharded"`` (`fl.pop_sampler`): the
+mesh-sharded block-local Gumbel top-k cohort sampler, whose O(N) population
+state and selection work shard over the same ``(pod, data)`` mesh as the
+cohort — the fleet-scale companion to the streamed population backend. It
+is a different (equally exact) sampler family than the default
+``"global"``; mirrored host state (``trainer.participation``, Pace-Steering
+recency) is sliced back to ``n_users`` transparently.
 """
 from __future__ import annotations
 
@@ -92,7 +100,7 @@ class FederatedTrainer:
                  cohort_chunk: Optional[int] = None,
                  clip_path: str = "fused",
                  population_backend: str = "device",
-                 population_store=None,
+                 population_store=None, sampler: str = "global",
                  fault_config: Optional[FaultConfig] = None, eval_fn=None,
                  eval_every: int = 1):
         if backend not in BACKENDS:
@@ -106,6 +114,10 @@ class FederatedTrainer:
             raise ValueError("fault_config is an engine-backend feature "
                              "(the over-selection/report-goal protocol lives "
                              "in the engine round bodies); use "
+                             "backend='engine'")
+        if backend == "host" and sampler != "global":
+            raise ValueError("sampler is an engine-backend feature (the "
+                             "host loop samples via PopulationSim); use "
                              "backend='engine'")
         if backend == "host" and (population_backend != "device"
                                   or population_store is not None):
@@ -194,7 +206,7 @@ class FederatedTrainer:
                 pace_penalty=self.pop.pace_penalty,
                 rounds_per_call=rounds_per_call,
                 sampling=self.sampling, num_shards=num_shards,
-                num_pods=num_pods,
+                num_pods=num_pods, sampler=sampler,
                 cohort_chunk=cohort_chunk, clip_path=clip_path,
                 fault_config=fault_config,
                 eval_fn=eval_fn, eval_every=eval_every)
@@ -296,8 +308,13 @@ class FederatedTrainer:
         self.accountant.step(stepped)
         # mirror device population state back into the host PopulationSim so
         # post-hoc analyses (participation, Pace-Steering recency) see it
-        self.participation = np.asarray(self._estate.participation, np.int64)
-        self.pop.absorb_last_round(np.asarray(self._estate.last_round))
+        # (the sharded sampler's vectors carry n_pad ≥ n_users rows — the
+        # padding never participates, slice it off)
+        n = self.engine.n_users
+        self.participation = np.asarray(
+            self._estate.participation, np.int64)[:n]
+        self.pop.absorb_last_round(
+            np.asarray(self._estate.last_round)[:n])
         return recs
 
     # ------------------------------------------------------- crash resilience
@@ -350,8 +367,7 @@ class FederatedTrainer:
             participation=jnp.asarray(est["participation"]),
             round_idx=jnp.asarray(est["round_idx"]))
         if getattr(self.engine, "mesh", None) is not None:
-            state = jax.device_put(
-                state, NamedSharding(self.engine.mesh, P()))
+            state = self.engine.place_state(state)
         else:
             state = jax.device_put(state)
         self._estate = state
@@ -360,8 +376,9 @@ class FederatedTrainer:
         self.state.round_idx = int(meta["round_idx"])
         self.state.history = json.loads(meta["history"])
         self.accountant.restore_rounds(int(meta["accountant_rounds"]))
-        self.participation = np.asarray(est["participation"], np.int64)
-        self.pop.absorb_last_round(np.asarray(est["last_round"]))
+        n = self.engine.n_users
+        self.participation = np.asarray(est["participation"], np.int64)[:n]
+        self.pop.absorb_last_round(np.asarray(est["last_round"])[:n])
         return self.state.round_idx
 
     # ---------------------------------------------------------------- public

@@ -5,6 +5,13 @@ without replacement — in the production system, from the (much smaller,
 Pace-Steering-shaped) set of checked-in devices, which is precisely the gap
 between deployed mechanism and provable guarantee discussed in §V-A.
 Poisson sampling (the [MRTZ17] scheme) is provided for comparison.
+
+These are the *host-loop* (NumPy) samplers. The device engine has two
+on-device counterparts: `fl.engine.sample_cohort` / `fl.engine.
+poisson_select` (the monolithic ``sampler="global"`` family) and the
+mesh-sharded block-local Gumbel top-k of `fl.pop_sampler`
+(``sampler="sharded"`` — fleet-scale O(N) state sharded over the cohort
+mesh).
 """
 from __future__ import annotations
 

@@ -1,2 +1,2 @@
-from repro.kernels.cifg_cell.ops import cifg_sequence, cifg_step
+from repro.kernels.cifg_cell.ops import cifg_sequence, cifg_states, cifg_step
 from repro.kernels.cifg_cell.ref import cifg_cell_ref

@@ -238,6 +238,35 @@ def cifg_sequence(zx, h0, c0, w_h, *, cell: str = "seq", compute_dtype=None,
                           bool(interpret))
 
 
+def cifg_states(zx, h0, c0, w_h, *, cell: str = "seq", compute_dtype=None,
+                interpret=None):
+    """Forward-only whole-sequence CIFG recurrence returning the **full**
+    state stacks ``(hs, cs)``, each (S, B, H) f32 — the building block of
+    the length-aware (bucket-padded) prefill: gather ``(hs[t], cs[t])`` to
+    read the state *as of step t*.
+
+    Shares the per-step forward math with :func:`cifg_sequence` (both run
+    `_seq_scan`), and the ``"seq"`` cell's step *is* `ref.cifg_cell_ref` —
+    so for every cell path, ``(hs[t], cs[t])`` of a right-padded run is
+    bit-identical to the final state of an unpadded run of length ``t+1``
+    (the scan is causal; padding steps only execute after ``t``). No
+    custom VJP — this is an inference-path op (differentiate through
+    :func:`cifg_sequence` instead)."""
+    if zx.ndim != 3 or h0.ndim != 2 or c0.shape != h0.shape \
+            or zx.shape[1:] != (h0.shape[0], 3 * h0.shape[1]) \
+            or w_h.shape != (h0.shape[1], 3 * h0.shape[1]):
+        raise ValueError(
+            f"cifg_states: expected zx (S, B, 3H), h0/c0 (B, H), "
+            f"w_h (H, 3H) — got zx {tuple(zx.shape)}, h0 {tuple(h0.shape)}, "
+            f"c0 {tuple(c0.shape)}, w_h {tuple(w_h.shape)}")
+    if cell not in ("fused", "seq"):
+        raise ValueError(f"cell must be 'fused' or 'seq', got {cell!r}")
+    if interpret is None:
+        interpret = K.default_interpret()
+    cd = str(jnp.dtype(compute_dtype)) if compute_dtype is not None else None
+    return _seq_scan(zx, h0, c0, w_h, cell, cd, bool(interpret))
+
+
 def cifg_step(zx, h, c, w_h, *, compute_dtype=None, interpret=None):
     """Fused CIFG recurrent step (forward + custom fused backward).
 

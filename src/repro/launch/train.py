@@ -94,6 +94,15 @@ def main():
                          "(see tools/build_corpus.py); replaces the "
                          "synthesized FederatedDataset and implies "
                          "--population-backend streamed unless overridden")
+    ap.add_argument("--sampler", default="global",
+                    choices=["global", "sharded"],
+                    help="cohort-selection implementation (engine backend): "
+                         "global = monolithic O(N) sampler on one device "
+                         "(the historical trajectory family); sharded = "
+                         "mesh-sharded block-local Gumbel top-k "
+                         "(fl.pop_sampler) — O(N) population state and "
+                         "selection work shard over (pod, data), use at "
+                         "fleet scale")
     ap.add_argument("--availability", type=float, default=0.3,
                     help="per-round device check-in probability; keep "
                          "availability·n_users above clients_per_round")
@@ -183,6 +192,9 @@ def main():
     if population_backend == "streamed" and args.backend == "host":
         raise SystemExit("--population-backend streamed needs the engine "
                          "backend (the host loop reads the dataset directly)")
+    if args.sampler != "global" and args.backend == "host":
+        raise SystemExit("--sampler sharded needs the engine backend (the "
+                         "host loop samples via PopulationSim)")
     faults = None
     if (args.fault_dropout > 0 or args.fault_straggler > 0
             or args.fault_corrupt > 0 or args.report_goal is not None):
@@ -212,6 +224,7 @@ def main():
                                clip_path=args.clip_path,
                                population_backend=population_backend,
                                population_store=store,
+                               sampler=args.sampler,
                                fault_config=faults)
 
     out = Path(args.out)

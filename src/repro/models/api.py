@@ -25,3 +25,11 @@ class Model(NamedTuple):
 # evicts sessions by scattering their state into individual cache slots.
 # The CIFG-LSTM cache (h, c, pos — all (B, ...)) satisfies this; ring-buffer
 # KV caches with a shared scalar position do not (yet).
+#
+# Length-aware prefill (optional): a model that honors batch["length"]
+# ((B,) int32 true prompt lengths inside right-padded tokens) — returning
+# state and last-position logits *bitwise identical* to an unpadded prefill
+# of that length — gets bucket-padded admission in the serving engine (one
+# prefill compile per power-of-two length instead of per distinct length).
+# The engine verifies the contract with a behavioral probe at construction
+# and falls back to exact-length prefills when it doesn't hold.

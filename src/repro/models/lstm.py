@@ -34,7 +34,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.kernels.cifg_cell import cifg_cell_ref, cifg_sequence, cifg_step
+from repro.kernels.cifg_cell import (cifg_cell_ref, cifg_sequence,
+                                     cifg_states, cifg_step)
 from repro.models import layers as L
 from repro.models.api import Model
 from repro.models.embed import embed_tokens, embedding_init, lm_logits
@@ -131,11 +132,40 @@ def init_cache(cfg: ModelConfig, batch_size: int, max_len: int):
 
 
 def prefill(params, batch, cfg: ModelConfig, *, max_len: int = None):
+    """Prompt prefill → (last-position logits (B, V), decode cache).
+
+    An optional ``batch["length"]`` ((B,) int32, 1 ≤ length ≤ S) marks each
+    row's true prompt length inside right-padded ``tokens`` — the serving
+    engine's bucket-padded admission path. The recurrence is causal and the
+    hoisted input-projection GEMM is row-stable, so the state and logits
+    gathered at ``length - 1`` are bit-identical to an unpadded prefill of
+    exactly ``length`` tokens (tests/test_serve_engine.py pins this)."""
     del max_len  # recurrent state — nothing to pad
-    logits, (h, c) = forward(params, batch, cfg, collect_cache=True)
-    B, S = batch["tokens"].shape
-    return logits[:, -1, :], {"h": h, "c": c,
-                              "pos": jnp.full((B,), S, jnp.int32)}
+    if "length" not in batch:
+        logits, (h, c) = forward(params, batch, cfg, collect_cache=True)
+        B, S = batch["tokens"].shape
+        return logits[:, -1, :], {"h": h, "c": c,
+                                  "pos": jnp.full((B,), S, jnp.int32)}
+    cd = jnp.dtype(cfg.compute_dtype)
+    tokens = batch["tokens"]
+    length = jnp.asarray(batch["length"], jnp.int32)
+    B = tokens.shape[0]
+    x = embed_tokens(params["embed"], tokens, cd)
+    zx = _input_projection(params, x, cd)
+    h0 = jnp.zeros((B, cfg.d_ff), jnp.float32)
+    c0 = jnp.zeros((B, cfg.d_ff), jnp.float32)
+    # full (S, B, H) state stacks through the same per-step forward as
+    # _recurrence ("seq"'s step IS the "ref" cell), gathered at length-1
+    path = resolve_cell_path(cfg)
+    hs, cs = cifg_states(zx.transpose(1, 0, 2), h0, c0, params["w_h"],
+                         cell="fused" if path == "fused" else "seq",
+                         compute_dtype=cfg.compute_dtype)
+    rows = jnp.arange(B)
+    h = hs[length - 1, rows]
+    c = cs[length - 1, rows]
+    y = (h.astype(cd) @ params["w_proj"].astype(cd))[:, None, :]
+    logits = lm_logits(params["embed"], y)[:, 0, :]
+    return logits, {"h": h, "c": c, "pos": length}
 
 
 def decode_step(params, tokens, cache, cfg: ModelConfig):

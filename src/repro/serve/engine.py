@@ -25,6 +25,13 @@ simulation scale:
 * **Top-k candidates** — each emitted position carries the ranked
   ``top_k`` candidate ids for the suggestion strip (``lax.top_k`` fused
   into the tick).
+* **Bucketed admission** — prefill prompt lengths are padded up to powers
+  of two (the model's length-aware prefill gathers the state at the true
+  length, so results are bitwise identical to the exact-length prefill):
+  the admission path compiles O(log max_prompt) prefill programs instead of
+  one per distinct length, which is what keeps admission p99 bounded under
+  organic length mixes. Models without length-aware prefill (detected by a
+  behavioral probe at construction) fall back to exact-length admission.
 * **Atomic checkpoint hot-swap** — :meth:`swap_params` /
   :meth:`load_checkpoint` promote a new checkpoint between ticks: one
   host-side reference assignment, in-flight sessions keep their slots and
@@ -126,6 +133,10 @@ class ServeEngine:
             last, sub = model.prefill(p, {"tokens": toks})
             return last[:, :vocab], sub
 
+        def _prefill_len(p, toks, length):
+            last, sub = model.prefill(p, {"tokens": toks, "length": length})
+            return last[:, :vocab], sub
+
         def _admission_sample(lg, key, temp):
             tok = sampling.sample_tokens(
                 lg, key[None], jnp.zeros((1,), jnp.int32), temp[None])
@@ -142,9 +153,15 @@ class ServeEngine:
             return nxt, sampling.topk_ids(lg, K), cache
 
         self._prefill_j = jax.jit(_prefill)
+        self._prefill_len_j = jax.jit(_prefill_len)
         self._admission_sample_j = jax.jit(_admission_sample)
         self._admit_j = jax.jit(_admit, donate_argnums=(0,))
         self._tick_j = jax.jit(_tick, donate_argnums=(1,))
+        # admission latency per admitted session (includes the prefill jit
+        # compile on a fresh *bucketed* length — the long tail bucketing
+        # exists to bound); bench_serve.py reports p50/p99 from this
+        self._admission_times: List[float] = []
+        self._bucketed = self._probe_length_support()
 
     # ------------------------------------------------------------- frontend
 
@@ -266,11 +283,60 @@ class ServeEngine:
         ttl = sess.request.ttl_ticks
         return ttl if ttl is not None else self.default_ttl_ticks
 
+    def _probe_length_support(self) -> bool:
+        """Behavioral probe for the length-aware prefill contract: a model
+        supports bucket-padded admission iff prefilling ``[t]`` unpadded and
+        ``[t, 0]`` with ``length=[1]`` agree *bitwise* (logits and every
+        cache leaf). A model that rejects — or silently ignores — the
+        ``"length"`` batch key fails the probe, and admission falls back to
+        exact-length prefills (one jit compile per distinct prompt
+        length)."""
+        try:
+            toks = jnp.zeros((1, 1), jnp.int32)
+            ref_lg, ref_sub = self._prefill_j(self._params, toks)
+            lg, sub = self._prefill_len_j(
+                self._params, jnp.zeros((1, 2), jnp.int32),
+                jnp.ones((1,), jnp.int32))
+        except Exception:
+            return False
+        ref_leaves = jax.tree_util.tree_leaves((ref_lg, ref_sub))
+        leaves = jax.tree_util.tree_leaves((lg, sub))
+        return len(ref_leaves) == len(leaves) and all(
+            a.shape == b.shape and bool(jnp.all(a == b))
+            for a, b in zip(ref_leaves, leaves))
+
+    @property
+    def admission_times_s(self) -> tuple:
+        """Wall-clock seconds per admission (prefill + first-token sample +
+        slot scatter, synced on the emitted token), in admission order."""
+        return tuple(self._admission_times)
+
+    @property
+    def bucketed_admission(self) -> bool:
+        """True when the construction-time probe validated the model's
+        length-aware prefill and admissions pad to power-of-two buckets."""
+        return self._bucketed
+
     def _admit(self, slot: int, sess: _Session) -> None:
         """Prefill the prompt (current params), scatter the session state
-        into ``slot``, and emit token 0 from the prefill logits."""
-        prompt = jnp.asarray(sess.request.prompt, jnp.int32)[None, :]
-        lg, sub = self._prefill_j(self._params, prompt)
+        into ``slot``, and emit token 0 from the prefill logits. Prompt
+        lengths are bucketed to powers of two (right-padded, with the true
+        length gathered inside the model's length-aware prefill) so a fresh
+        length only compiles when it crosses a power of two — token-for-
+        token identical to the exact-length prefill, which is what
+        :meth:`_probe_length_support` guarantees up front."""
+        t0 = time.perf_counter()
+        raw = np.asarray(sess.request.prompt, np.int32)
+        L = int(raw.shape[0])
+        if self._bucketed and L > 1:
+            Lp = 1 << (L - 1).bit_length()
+            padded = np.zeros((1, Lp), np.int32)
+            padded[0, :L] = raw
+            lg, sub = self._prefill_len_j(self._params, jnp.asarray(padded),
+                                          jnp.full((1,), L, jnp.int32))
+        else:
+            lg, sub = self._prefill_j(self._params,
+                                      jnp.asarray(raw)[None, :])
         tok0, cands0 = self._admission_sample_j(
             lg, jnp.asarray(sess.key),
             jnp.asarray(sess.request.temperature, jnp.float32))
@@ -280,6 +346,7 @@ class ServeEngine:
         self._keys[slot] = sess.key
         self._temps[slot] = sess.request.temperature
         self._record_token(sess, int(tok0), np.asarray(cands0))
+        self._admission_times.append(time.perf_counter() - t0)
         self._cur_tok[slot] = sess.tokens[-1]
         self._ts[slot] = 1
         if len(sess.tokens) >= sess.request.steps:

@@ -70,6 +70,16 @@ def cohort_spec(mesh_cfg: MeshConfig):
     return P(axes[0] if len(axes) == 1 else axes)
 
 
+def population_spec(mesh_cfg: MeshConfig):
+    """PartitionSpec of the padded population/user axis under the sharded
+    cohort sampler (`fl.pop_sampler`): identical layout rule to
+    :func:`cohort_spec` — both axes shard pod-major over the mesh's batch
+    axes, so a shard's population rows and its cohort slots live on the
+    same devices (candidate merge and cohort staging never cross an extra
+    boundary)."""
+    return cohort_spec(mesh_cfg)
+
+
 FSDP = "data"     # params FSDP-shard over data (replicated across pods)
 MP = "model"
 

@@ -1,0 +1,351 @@
+"""Sharded cohort sampler ↔ global sampler parity (the O(N) scaling core).
+
+`SimEngine(sampler="sharded")` replaces the monolithic per-round selection
+(global (N,) uniform/Gumbel vectors + flat top-k) with block-keyed per-shard
+draws, per-shard top-k merged through the canonical tree, and O(cohort)
+masked scatters into mesh-sharded population vectors. It must be *the same
+mechanism* as the default sampler within its own seed — deterministic and
+bit-exact across every {pods} × {shards} × {chunk} × {device, streamed} ×
+{fixed, poisson} × {faults on/off} combination — while the default
+``sampler="global"`` path stays byte-for-byte untouched.
+
+Shard counts above the visible device count are skipped; run the full grid
+on CPU with
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m pytest -q tests/test_sampler_sharded.py
+
+(the CI ``population`` leg does exactly this).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ClientConfig, DPConfig, get_config
+from repro.data.corpus import BigramCorpus
+from repro.data.federated import FederatedDataset
+from repro.fl import pop_sampler
+from repro.fl.engine import SAMPLERS, SimEngine
+from repro.fl.faults import FaultConfig
+from repro.fl.round import FederatedTrainer
+from repro.models import build
+
+VOCAB = 300
+N_USERS = 80
+ROUNDS = 4
+
+needs = {s: pytest.mark.skipif(
+    len(jax.devices()) < s,
+    reason=f"needs {s} devices (XLA_FLAGS="
+           f"--xla_force_host_platform_device_count=8)") for s in (2, 4, 8)}
+
+# (num_shards, num_pods) grid — pod-major rank must reproduce the flat order
+TOPOLOGIES = [pytest.param(s, p, marks=needs[s * p], id=f"{s}x{p}")
+              for s, p in ((2, 1), (4, 1), (8, 1), (2, 2), (4, 2))]
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("gboard-cifg-lstm").with_(vocab=VOCAB, d_model=24,
+                                               d_ff=48)
+    model = build(cfg)
+    corpus = BigramCorpus(vocab_size=VOCAB, seed=0)
+    ds = FederatedDataset(corpus, n_users=N_USERS, seq_len=16,
+                          sentences_per_user=20)
+    return cfg, model, ds
+
+
+def _run(model, ds, *, sampler="global", num_shards=1, num_pods=1,
+         sampling="fixed", backend="device", chunk=None, faults=None,
+         cohort=12, rounds=ROUNDS, seed=0):
+    dp = DPConfig(clients_per_round=cohort, noise_multiplier=0.0,
+                  clip_norm=0.8, server_opt="momentum", server_lr=0.5,
+                  server_momentum=0.9, sampling=sampling)
+    cl = ClientConfig(local_epochs=1, batch_size=10, lr=0.3)
+    eng = SimEngine(model, ds.to_device_arrays(), dp, cl, n_local_batches=2,
+                    availability=1.0 if sampling == "poisson" else 0.5,
+                    rounds_per_call=2, num_shards=num_shards,
+                    num_pods=num_pods, cohort_chunk=chunk,
+                    population_backend=backend, sampler=sampler,
+                    fault_config=faults)
+    state = eng.init_state(model.init(jax.random.PRNGKey(1)), seed=seed)
+    state, hist = eng.run(state, rounds)
+    return eng, state, hist
+
+
+def _max_leaf_diff(a, b):
+    d = jax.tree_util.tree_map(
+        lambda x, y: float(jnp.max(jnp.abs(x.astype(jnp.float32)
+                                           - y.astype(jnp.float32)))), a, b)
+    return max(jax.tree_util.tree_leaves(d))
+
+
+def _assert_same_run(eng, state, hist, ref_state, ref_hist):
+    """Bit-exactness of everything a sampler touches: realized cohorts,
+    population vectors (sliced to real users — the sharded vectors carry
+    n_pad rows), trajectories, and server state."""
+    n = eng.n_users
+    np.testing.assert_array_equal(hist["n_clients"], ref_hist["n_clients"])
+    np.testing.assert_array_equal(hist["loss"], ref_hist["loss"])
+    np.testing.assert_array_equal(
+        np.asarray(state.participation)[:n],
+        np.asarray(ref_state.participation)[:n])
+    np.testing.assert_array_equal(
+        np.asarray(state.last_round)[:n],
+        np.asarray(ref_state.last_round)[:n])
+    assert _max_leaf_diff(state.params, ref_state.params) == 0.0
+    assert _max_leaf_diff(state.opt_state, ref_state.opt_state) == 0.0
+
+
+@pytest.fixture(scope="module")
+def baselines(setup):
+    """sampler="sharded", num_shards=1 reference runs — the sharded sampler
+    is a *different (equally exact) sampler family* than global (block-keyed
+    streams), so its parity contract is across topologies within its own
+    seed, not against the global stream."""
+    _, model, ds = setup
+    return {key: _run(model, ds, sampler="sharded", sampling=key)
+            for key in ("fixed", "poisson")}
+
+
+# ------------------------------------------------------------ default path
+
+def test_default_sampler_is_global(setup):
+    """Regression: the sampler knob defaults to the pre-existing global
+    path — constructing an engine without it must not change anything."""
+    _, model, ds = setup
+    dp = DPConfig(clients_per_round=12, noise_multiplier=0.0, clip_norm=0.8)
+    cl = ClientConfig(local_epochs=1, batch_size=10, lr=0.3)
+    eng = SimEngine(model, ds.to_device_arrays(), dp, cl)
+    assert eng.sampler == "global"
+    assert SAMPLERS == ("global", "sharded")
+    # global keeps the unpadded population axis: state vectors are (N,)
+    state = eng.init_state(model.init(jax.random.PRNGKey(1)), seed=0)
+    assert state.participation.shape == (N_USERS,)
+
+
+def test_invalid_sampler_rejected(setup):
+    _, model, ds = setup
+    dp = DPConfig(clients_per_round=12, noise_multiplier=0.0, clip_norm=0.8)
+    cl = ClientConfig(local_epochs=1, batch_size=10, lr=0.3)
+    with pytest.raises(ValueError, match="sampler"):
+        SimEngine(model, ds.to_device_arrays(), dp, cl, sampler="blocked")
+
+
+def test_host_backend_rejects_sharded_sampler(setup):
+    """The trainer's host backend has no mesh — asking it for the sharded
+    sampler must fail loudly at construction."""
+    _, model, ds = setup
+    dp = DPConfig(clients_per_round=12, noise_multiplier=0.0, clip_norm=0.8)
+    cl = ClientConfig(local_epochs=1, batch_size=10, lr=0.3)
+    with pytest.raises(ValueError, match="engine"):
+        FederatedTrainer(model, ds, dp, cl, backend="host",
+                         sampler="sharded")
+
+
+# --------------------------------------------------- sharded ≡ global grid
+
+@pytest.mark.parametrize("sampling", ["fixed", "poisson"])
+def test_sharded_is_a_valid_sampler(setup, baselines, sampling):
+    """The sharded family realizes the same round protocol as global: fixed
+    mode fills the cohort exactly; Poisson mode's realized sizes are the
+    buffer-truncated Bernoulli counts; participation totals match the
+    realized round sizes."""
+    eng, state, hist = baselines[sampling]
+    if sampling == "fixed":
+        np.testing.assert_array_equal(hist["n_clients"], 12)
+    else:
+        assert (np.asarray(hist["n_clients"]) <= eng.padded).all()
+        assert (np.asarray(hist["n_clients"]) > 0).all()
+    assert int(np.asarray(state.participation).sum()) == \
+        int(np.asarray(hist["n_clients"]).sum())
+    # only real users are ever selected (padded rows are masked invalid)
+    assert np.asarray(state.participation)[eng.n_users:].sum() == 0
+
+
+@pytest.mark.parametrize("sampling", ["fixed", "poisson"])
+@pytest.mark.parametrize("num_shards,num_pods", TOPOLOGIES)
+def test_sharded_topology_grid_bit_exact(setup, baselines, num_shards,
+                                         num_pods, sampling):
+    """Every (pods, shards) topology × sampling mode: per-shard top-k +
+    canonical merge (or per-shard Poisson packing + index-order merge) must
+    select the identical cohort and land the identical trajectory."""
+    _, model, ds = setup
+    _, ref_state, ref_hist = baselines[sampling]
+    eng, state, hist = _run(model, ds, sampler="sharded",
+                            num_shards=num_shards, num_pods=num_pods,
+                            sampling=sampling)
+    _assert_same_run(eng, state, hist, ref_state, ref_hist)
+
+
+@pytest.mark.parametrize("num_shards,num_pods",
+                         [pytest.param(4, 2, marks=needs[8])])
+def test_streamed_backend_parity(setup, baselines, num_shards, num_pods):
+    """The host-driven streamed population backend shares `_sample_phase`
+    with the device scan — sharded selection must be bit-exact there too."""
+    _, model, ds = setup
+    _, ref_state, ref_hist = baselines["fixed"]
+    eng, state, hist = _run(model, ds, sampler="sharded",
+                            num_shards=num_shards, num_pods=num_pods,
+                            backend="streamed")
+    _assert_same_run(eng, state, hist, ref_state, ref_hist)
+
+
+@pytest.mark.parametrize("num_shards", [pytest.param(4, marks=needs[4])])
+def test_chunked_rounds_parity(setup, baselines, num_shards):
+    """cohort_chunk streaming composes with the sharded sampler: selection
+    happens before the chunk scan, so chunking must not move a bit."""
+    _, model, ds = setup
+    _, ref_state, ref_hist = baselines["fixed"]
+    eng, state, hist = _run(model, ds, sampler="sharded",
+                            num_shards=num_shards, chunk=1)
+    _assert_same_run(eng, state, hist, ref_state, ref_hist)
+
+
+def test_seed_determinism(setup):
+    """Same seed → identical sharded run; different seed → different
+    cohorts (the sampler is deterministic in the seed, not degenerate)."""
+    _, model, ds = setup
+    _, sa, ha = _run(model, ds, sampler="sharded")
+    _, sb, hb = _run(model, ds, sampler="sharded")
+    np.testing.assert_array_equal(np.asarray(sa.participation),
+                                  np.asarray(sb.participation))
+    np.testing.assert_array_equal(ha["loss"], hb["loss"])
+    _, sc, _ = _run(model, ds, sampler="sharded", seed=1)
+    assert not np.array_equal(np.asarray(sa.participation),
+                              np.asarray(sc.participation))
+
+
+# ------------------------------------------------------------ fault model
+
+@pytest.mark.parametrize("backend,num_shards,num_pods", [
+    pytest.param("device", 8, 1, marks=needs[8], id="device-8x1"),
+    pytest.param("streamed", 2, 2, marks=needs[4], id="streamed-2x2"),
+])
+def test_fault_model_composition(setup, backend, num_shards, num_pods):
+    """Over-selection, dropout/straggler/corrupt fates, and report-goal
+    accounting compose with sharded selection: fates are drawn from the
+    replicated fault stream against the merged cohort, so the faulty
+    trajectory matches the global sampler's bit-for-bit."""
+    _, model, ds = setup
+    faults = FaultConfig(seed=5, dropout_prob=0.2, straggler_prob=0.1,
+                         corrupt_prob=0.1)
+    _, ref_state, ref_hist = _run(model, ds, sampler="sharded",
+                                  faults=faults, chunk=1)
+    eng, state, hist = _run(model, ds, sampler="sharded", faults=faults,
+                            num_shards=num_shards, num_pods=num_pods,
+                            backend=backend, chunk=1)
+    np.testing.assert_array_equal(hist["n_reported"], ref_hist["n_reported"])
+    _assert_same_run(eng, state, hist, ref_state, ref_hist)
+
+
+# --------------------------------------------- merge-identity property math
+
+def _flat_lex_topk(skey, k):
+    """Reference: global lex top-k on (score desc, user id asc) — exactly
+    what `lax.top_k` over the flat sortable keys realizes (stable ties)."""
+    n = skey.shape[0]
+    order = np.lexsort((np.arange(n), -skey.astype(np.int64)))
+    return order[:k].astype(np.int32)
+
+
+@pytest.mark.parametrize("seed", range(6))
+@pytest.mark.parametrize("shards", [2, 4, 8])
+def test_merge_topk_equals_flat_topk_adversarial_ties(seed, shards):
+    """Property: per-shard top-k + `merge_topk` == flat lex top-k, under
+    adversarial weights — a tiny value set (including -0.0/0.0 and values a
+    single ulp apart) so ties pile up across shard boundaries and the
+    winner is decided by the user-id tie-break, not the scores."""
+    rng = np.random.default_rng(seed)
+    per, k = 32, 12
+    n = shards * per
+    base = np.array([-1.0, -0.0, 0.0, 0.25, np.nextafter(0.25, 1.0),
+                     1.0, np.inf, -np.inf], np.float32)
+    score = rng.choice(base, n).astype(np.float32)
+    skey = np.asarray(pop_sampler.sortable_f32(jnp.asarray(score)))
+    vals, gids = [], []
+    for s in range(shards):
+        v, li = jax.lax.top_k(jnp.asarray(skey[s * per:(s + 1) * per]), k)
+        vals.append(v)
+        gids.append((s * per + li).astype(jnp.int32))
+    merged = pop_sampler.merge_topk(jnp.concatenate(vals),
+                                    jnp.concatenate(gids), k)
+    np.testing.assert_array_equal(np.asarray(merged),
+                                  _flat_lex_topk(skey, k))
+
+
+@pytest.mark.parametrize("seed", range(4))
+@pytest.mark.parametrize("n,k", [(80, 12), (4096, 200), (51200, 200),
+                                 (60_000, 200), (262_145, 16)])
+def test_blocked_topk_is_bit_identical_to_lax_topk(seed, n, k):
+    """`blocked_topk` (the chunk-max-pruned shard top-k) must return the
+    *exact* `lax.top_k` output — values and stable lowest-index ties — on
+    both sides of its pruning threshold, under heavy ties (a tiny value
+    set) and non-chunk-aligned lengths (tail padding)."""
+    rng = np.random.default_rng(seed)
+    base = np.array([-(2 ** 31), -7, 0, 3, 3, 3, 9, 2 ** 31 - 1], np.int64)
+    skey = jnp.asarray(rng.choice(base, n).astype(np.int32))
+    vals, idx = pop_sampler.blocked_topk(skey, k)
+    ref_vals, ref_idx = jax.lax.top_k(skey, k)
+    np.testing.assert_array_equal(np.asarray(vals), np.asarray(ref_vals))
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ref_idx))
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_poisson_pack_merge_equals_flat_packing(seed):
+    """Property: per-shard `pack_selected` + `merge_poisson` == the global
+    index-order packing with buffer truncation (`engine.poisson_select`
+    semantics: slot_mask marks exactly the buffer-resident devices)."""
+    rng = np.random.default_rng(seed)
+    shards, per, buffer = 4, 40, 16
+    n = shards * per
+    sel = rng.random(n) < 0.2
+    gids, counts = [], []
+    for s in range(shards):
+        g, c = pop_sampler.pack_selected(jnp.asarray(sel[s * per:(s + 1) * per]),
+                                         buffer, s * per)
+        gids.append(g)
+        counts.append(c[None])
+    ids, slot_mask = pop_sampler.merge_poisson(jnp.concatenate(gids),
+                                               jnp.concatenate(counts),
+                                               buffer)
+    flat = np.nonzero(sel)[0][:buffer]
+    expect = np.zeros(buffer, np.int32)
+    expect[:flat.shape[0]] = flat
+    np.testing.assert_array_equal(np.asarray(ids), expect)
+    np.testing.assert_array_equal(np.asarray(slot_mask),
+                                  np.arange(buffer) < flat.shape[0])
+
+
+def test_sortable_f32_is_monotone():
+    """`sortable_f32` is order-preserving over a hostile value set (signed
+    zeros, denormals, ulp neighbours, ±inf): keys never invert a float
+    comparison. -0.0 maps one key *below* 0.0 (distinct bit patterns) —
+    a total order refinement that is identical on every shard, which is
+    all the merge identity needs."""
+    xs = np.array([-np.inf, -3e38, -1.0, -np.nextafter(0.0, 1.0), -0.0,
+                   0.0, np.nextafter(0.0, 1.0), 0.25,
+                   np.nextafter(0.25, 1.0), 1.0, 3e38, np.inf], np.float32)
+    keys = np.asarray(pop_sampler.sortable_f32(jnp.asarray(xs)),
+                      np.int64)
+    # xs ascends (with float-equal neighbours): keys must never decrease,
+    # and every strict float increase must be a strict key increase
+    for i in range(len(xs) - 1):
+        if xs[i] < xs[i + 1]:
+            assert keys[i] < keys[i + 1], (xs[i], xs[i + 1])
+        else:
+            assert keys[i] <= keys[i + 1], (xs[i], xs[i + 1])
+
+
+def test_pop_pad_topology_invariant():
+    """The padded population axis is identical for every topology in the
+    parity grid — the precondition for block-keyed draws landing on the
+    same users everywhere."""
+    for n in (7, 80, 100, 10**6 + 3):
+        sizes = {pop_sampler.pop_pad(n, s, p)
+                 for s, p in ((1, 1), (2, 1), (4, 1), (8, 1), (2, 2),
+                              (4, 2))}
+        assert len(sizes) == 1
+        (pad,) = sizes
+        assert pad >= n and pad % pop_sampler.n_pop_blocks() == 0

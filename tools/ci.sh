@@ -85,6 +85,15 @@ grep -q "sim_engine/population/.*backend=streamed" BENCH_ci.json || {
        "from BENCH_ci.json" >&2
   exit 1
 }
+# the mesh-sharded cohort sampler must leave a per-PR trace: a
+# sampler=sharded population record proves the block-local Gumbel top-k
+# path (block-keyed draws → per-shard top-k → canonical merge → O(cohort)
+# masked scatters) actually ran in the smoke
+grep -q "sim_engine/population/.*sampler=sharded" BENCH_ci.json || {
+  echo "FAIL: sim_engine population sampler=sharded record missing" \
+       "from BENCH_ci.json" >&2
+  exit 1
+}
 # the production fault protocol must leave a per-PR trace: a faults record
 # proves the over-selection/report-goal round path (fault fates → masked
 # fold → commit/abort cond) actually ran in the smoke
